@@ -1,0 +1,64 @@
+"""The paper's central comparison (Sec. 2.2 cost analysis): communication
+volume of the 2D / 2.5D / 3D distributed CNN algorithms — analytic cost_C
++ cost_I vs collective wire bytes measured from compiled HLO on 8 virtual
+devices (subprocess; the bench process keeps 1 device).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_BODY = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax, jax.numpy as jnp
+from repro.core import ConvProblem, comm_volume, synthesize
+from repro.core.grid import ProcessorGrid
+from repro.core.tile_optimizer import solve
+from repro.dist.conv2d import conv2d_distributed, make_conv_mesh
+from repro.launch.hlo_analysis import analyze_hlo
+
+N, C, H, W, K, kh = 8, 32, 16, 16, 32, 3
+x = jax.ShapeDtypeStruct((N, C, H, W), jnp.float32)
+w = jax.ShapeDtypeStruct((K, C, kh, kh), jnp.float32)
+prob = ConvProblem.from_conv_layer(batch=N, cin=C, cout=K, h=H, w=W,
+                                   kh=kh, kw=kh, bytes_per_elem=4)
+out = []
+for grid, algo in [((8,1,1,1,1), "2D-DP"), ((4,1,1,2,1), "2D-SUMMA"),
+                   ((2,1,1,2,2), "2.5D"), ((1,1,1,2,4), "3D-ish")]:
+    mesh = make_conv_mesh(grid)
+    for sched in ["allgather", "ring"]:
+        fn = jax.jit(lambda a, b: conv2d_distributed(a, b, mesh,
+                                                     schedule=sched))
+        rep = analyze_hlo(fn.lower(x, w).compile().as_text())
+        out.append({"grid": grid, "algo": algo, "sched": sched,
+                    "wire_bytes": rep["total_wire_bytes"],
+                    "counts": rep["coll_counts"]})
+print("JSON" + json.dumps(out))
+"""
+
+
+def run() -> list:
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(_ROOT, "src") + os.pathsep
+               + os.environ.get("PYTHONPATH", ""))
+    proc = subprocess.run([sys.executable, "-c", textwrap.dedent(_BODY)],
+                          env=env, capture_output=True, text=True,
+                          timeout=600)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    payload = [l for l in proc.stdout.splitlines()
+               if l.startswith("JSON")][0][4:]
+    rows = []
+    for rec in json.loads(payload):
+        rows.append((f"comm/{rec['algo']}/{rec['sched']}",
+                     f"{rec['wire_bytes']:.3e}B",
+                     str(rec["grid"]),
+                     "", ""))
+    return rows

@@ -1,0 +1,34 @@
+"""Framework-level benchmark: the paper's synthesizer driving per-layer
+sharding for the assigned architectures — decision mix and synthesis cost.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models.api import model_fns
+from repro.parallel import sharding as shd
+
+
+def run() -> list:
+    mesh = jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+    rows = []
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        fns = model_fns(cfg)
+        shapes = jax.eval_shape(
+            lambda fns=fns, cfg=cfg: fns.init(jax.random.PRNGKey(0), cfg))
+        t0 = time.perf_counter()
+        shd.param_specs(cfg, shapes, mesh, tokens_per_step=1 << 20)
+        dt = (time.perf_counter() - t0) * 1e6
+        dec = shd.param_specs.last_decisions
+        mix = {}
+        for v in dec.values():
+            mix[v] = mix.get(v, 0) + 1
+        rows.append((f"sharding/{arch}", f"{dt:.0f}",
+                     "+".join(f"{k}:{v}" for k, v in sorted(mix.items())),
+                     "", ""))
+    return rows

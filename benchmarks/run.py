@@ -1,0 +1,41 @@
+"""Benchmark harness — one module per paper table/claim.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  table12       Table 1/2 closed-form costs vs integer solver (the paper's
+                central analytic result)
+  comm          2D vs 2.5D vs 3D collective bytes, analytic vs HLO
+                (Sec. 2.2 cost analysis)
+  kernel        chip-level two-level tiling (Eq. 4 at VMEM scale)
+  sharding      synthesizer-as-sharding-engine across the 10 assigned archs
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (bench_comm_volume, bench_cost_model,
+                            bench_kernels, bench_sharding)
+    mods = [("cost_model", bench_cost_model),
+            ("comm_volume", bench_comm_volume),
+            ("kernels", bench_kernels),
+            ("sharding", bench_sharding)]
+    print("name,us_per_call,derived")
+    failed = 0
+    for name, mod in mods:
+        try:
+            for row in mod.run():
+                print(",".join(str(c) for c in row if str(c) != ""))
+        except Exception:
+            failed += 1
+            print(f"{name},ERROR,", file=sys.stderr)
+            traceback.print_exc()
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+"""Serving example: batched requests through prefill + decode with KV cache
+(llama smoke config on CPU; the same Engine serves the full configs on the
+production mesh).
+
+Run:  PYTHONPATH=src python examples/serve_lm.py
+"""
+
+import sys
+
+from repro.launch import serve as serve_mod
+
+
+def main():
+    sys.argv = ["serve", "--arch", "llama3.2-1b", "--smoke",
+                "--requests", "8", "--prompt-len", "32", "--gen", "32"]
+    serve_mod.main()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Paper core: two-level tile optimization + distributed-algorithm synthesis.
+
+Li, Xu, Sukumaran-Rajam, Rountev, Sadayappan — "Efficient Distributed
+Algorithms for Convolutional Neural Networks", SPAA '21.
+"""
+
+from repro.core.problem import ConvProblem, resnet50_layers
+from repro.core.cost_model import (
+    TileChoice,
+    cost_distributed_comm,
+    cost_distributed_init,
+    cost_distributed_total,
+    cost_global_memory,
+    cost_global_memory_exact,
+    cost_sequential,
+    cost_simplified,
+    memory_distributed,
+    ml_from_m,
+    simulate_tiled_movement,
+    tile_footprint,
+)
+from repro.core.tile_optimizer import (
+    ALGO_25D,
+    ALGO_2D,
+    ALGO_3D,
+    Solution,
+    brute_force,
+    solve,
+    solve_closed_form,
+    table1_cost,
+    table2_cost,
+)
+from repro.core.grid import (
+    CommVolume,
+    ProcessorGrid,
+    comm_volume,
+    compare_algorithms,
+    synthesize,
+)
+from repro.core.sharding_synthesis import (
+    LayerSharding,
+    synthesize_layer,
+    synthesize_model,
+)
+
+__all__ = [
+    "ConvProblem", "resnet50_layers", "TileChoice", "Solution",
+    "ProcessorGrid", "CommVolume", "LayerSharding",
+    "cost_sequential", "cost_global_memory", "cost_global_memory_exact",
+    "cost_simplified", "cost_distributed_init", "cost_distributed_comm",
+    "cost_distributed_total", "memory_distributed", "ml_from_m",
+    "tile_footprint", "simulate_tiled_movement",
+    "solve", "solve_closed_form", "brute_force", "table1_cost", "table2_cost",
+    "synthesize", "comm_volume", "compare_algorithms",
+    "synthesize_layer", "synthesize_model",
+    "ALGO_2D", "ALGO_25D", "ALGO_3D",
+]

@@ -1,0 +1,135 @@
+"""Map the paper's processor-grid synthesis onto a physical JAX mesh.
+
+The paper synthesizes a logical grid ``P_bhw x P_k x P_c`` per operator.  A
+real machine exposes a fixed mesh (e.g. ``(pod, data, model)``).  This module
+assigns each physical mesh axis wholly to one logical dimension so that the
+resulting factorization minimizes the paper's Eq. 3 cost, then emits
+``PartitionSpec``s for the three tensors:
+
+  logical dim   role                              tensor dims sharded
+  ----------    ------------------------------    -------------------
+  bhw           data parallelism                  In.b / Out.b (and h/w)
+  k             output-feature (column) TP        Ker.k / Out.k
+  c             contraction (row) TP + reduce     In.c / Ker.c   (+ psum Out)
+
+This is the paper's technique operating as a per-layer sharding synthesizer
+for every architecture in the framework: a transformer matmul is the
+degenerate CNN and lands in exactly the same machinery.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from jax.sharding import PartitionSpec as P
+
+from repro.core import cost_model, tile_optimizer
+from repro.core.cost_model import TileChoice
+from repro.core.problem import ConvProblem
+
+LOGICAL_DIMS = ("bhw", "k", "c")
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSharding:
+    """Result of synthesis for one operator on a concrete mesh."""
+
+    assignment: Dict[str, str]       # mesh axis -> logical dim ("bhw"|"k"|"c")
+    factors: Dict[str, int]          # logical dim -> product of axis sizes
+    algo: str                        # 2D-SUMMA / 2.5D / 3D analogue
+    case: str
+    cost: float                      # Eq. 3 cost (elements / processor)
+    choice: TileChoice
+
+    def axes_for(self, logical: str) -> Tuple[str, ...]:
+        """Physical mesh axes assigned to a logical dim (stable order)."""
+        return tuple(ax for ax, dim in self.assignment.items() if dim == logical)
+
+    # ---- PartitionSpecs for the matmul view  x:[m,k] w:[k,n] y:[m,n] ------
+    def spec_activation(self) -> P:
+        """x[m(=bhw), c]"""
+        return P(self._spec(("bhw",)), self._spec(("c",)))
+
+    def spec_weight(self) -> P:
+        """w[c, k]"""
+        return P(self._spec(("c",)), self._spec(("k",)))
+
+    def spec_output(self) -> P:
+        """y[m, k] — partial-summed over the 'c' axes (caller psums)."""
+        return P(self._spec(("bhw",)), self._spec(("k",)))
+
+    def reduce_axes(self) -> Tuple[str, ...]:
+        """Mesh axes over which Out is a partial sum (the 2.5D/3D c axes)."""
+        return self.axes_for("c")
+
+    def _spec(self, dims: Sequence[str]):
+        axes: List[str] = []
+        for d in dims:
+            axes.extend(self.axes_for(d))
+        if not axes:
+            return None
+        return tuple(axes) if len(axes) > 1 else axes[0]
+
+
+def synthesize_layer(p: ConvProblem, mesh_axes: Dict[str, int], M: float,
+                     *, ml_correction: bool = True,
+                     forced: Optional[Dict[str, str]] = None) -> LayerSharding:
+    """Choose the cost-minimizing assignment of mesh axes to logical dims.
+
+    ``forced`` pins specific mesh axes to logical dims (e.g. batch must stay
+    on the data axis for a training step shared across layers).
+    """
+    axes = list(mesh_axes.items())
+    Ptot = math.prod(s for _, s in axes)
+    M_L = cost_model.ml_from_m(p, M) if ml_correction else float(M)
+
+    best: Optional[LayerSharding] = None
+    for combo in itertools.product(LOGICAL_DIMS, repeat=len(axes)):
+        assignment = {ax: dim for (ax, _), dim in zip(axes, combo)}
+        if forced and any(assignment[a] != d for a, d in forced.items()):
+            continue
+        factors = {d: 1 for d in LOGICAL_DIMS}
+        for (ax, size), dim in zip(axes, combo):
+            factors[dim] *= size
+        if (factors["bhw"] > p.Nbhw or factors["k"] > p.Nk
+                or factors["c"] > p.Nc):
+            continue
+        Wbhw = p.Nbhw / factors["bhw"]
+        Wk = p.Nk / factors["k"]
+        Wc = p.Nc / factors["c"]
+        Tbhw, Tk = tile_optimizer._best_tiles_given_W(p, Wbhw, Wk, M_L)
+        choice = TileChoice(Wbhw=Wbhw, Wk=Wk, Wc=Wc, Tbhw=Tbhw, Tk=Tk)
+        cost = cost_model.cost_global_memory(p, choice)
+        if best is None or cost < best.cost:
+            case = tile_optimizer.classify(p, Ptot, M_L, choice)
+            best = LayerSharding(
+                assignment=assignment, factors=factors,
+                algo=tile_optimizer._CASE_TO_ALGO[case], case=case,
+                cost=cost, choice=choice)
+    if best is None:
+        raise ValueError(
+            f"no feasible mesh assignment for {p} on axes {mesh_axes}")
+    return best
+
+
+def synthesize_model(layers: Dict[str, ConvProblem], mesh_axes: Dict[str, int],
+                     M: float, *, batch_axes: Sequence[str] = ("pod", "data"),
+                     ml_correction: bool = True) -> Dict[str, LayerSharding]:
+    """Synthesize shardings for a whole model.
+
+    Training constraint: the batch dimension must be partitioned identically
+    across layers (activations flow layer to layer), so mesh axes named in
+    ``batch_axes`` are pinned to the logical 'bhw' dim; the remaining axes
+    are free per layer — giving each layer its own 2D/2.5D/3D regime, which
+    is exactly the paper's per-operator synthesis.
+    """
+    out = {}
+    for name, prob in layers.items():
+        forced = {a: "bhw" for a in batch_axes if a in mesh_axes}
+        out[name] = synthesize_layer(prob, mesh_axes, M,
+                                     ml_correction=ml_correction,
+                                     forced=forced)
+    return out

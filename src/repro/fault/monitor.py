@@ -1,0 +1,144 @@
+"""Fault tolerance: step-time straggler detection, heartbeats, emergency
+checkpoints, and elastic-restart bookkeeping.
+
+At 1000+ nodes the failure model is: (a) hard node loss — handled by
+checkpoint/restart with elastic resharding (ckpt/checkpointer.py restores
+into ANY mesh); (b) stragglers — detected here from step-time EMA
+z-scores; the runner responds by checkpointing and excluding the slow host
+(the data pipeline's (step, host) -> batch contract makes re-balancing
+coordination-free); (c) wedged collectives — watchdog timeout around the
+step future triggers an emergency save.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import signal
+import threading
+import time
+from typing import Callable, List, Optional
+
+
+@dataclasses.dataclass
+class StepStats:
+    ema: float = 0.0
+    var: float = 0.0
+    n: int = 0
+
+    def update(self, dt: float, alpha: float = 0.1):
+        if self.n == 0:
+            self.ema, self.var = dt, 0.0
+        else:
+            d = dt - self.ema
+            self.ema += alpha * d
+            self.var = (1 - alpha) * (self.var + alpha * d * d)
+        self.n += 1
+
+    @property
+    def std(self) -> float:
+        return self.var ** 0.5
+
+
+class StragglerMonitor:
+    """Flags steps slower than ema + z*std; tracks consecutive anomalies."""
+
+    def __init__(self, *, z: float = 3.0, patience: int = 3,
+                 warmup_steps: int = 5):
+        self.stats = StepStats()
+        self.z = z
+        self.patience = patience
+        self.warmup = warmup_steps
+        self.consecutive = 0
+        self.events: List[dict] = []
+
+    def observe(self, step: int, dt: float) -> bool:
+        """Returns True when mitigation should trigger."""
+        is_slow = (self.stats.n >= self.warmup
+                   and dt > self.stats.ema + self.z * max(self.stats.std,
+                                                          0.05 * self.stats.ema))
+        if is_slow:
+            self.consecutive += 1
+            self.events.append({"step": step, "dt": dt,
+                                "ema": self.stats.ema})
+        else:
+            self.consecutive = 0
+            self.stats.update(dt)
+        return self.consecutive >= self.patience
+
+
+class Heartbeat:
+    """Background liveness file/callback writer; a dead heartbeat is how the
+    cluster controller detects a wedged host."""
+
+    def __init__(self, beat_fn: Callable[[float], None],
+                 interval_s: float = 10.0):
+        self.beat_fn = beat_fn
+        self.interval = interval_s
+        self._stop = threading.Event()
+        self.thread = threading.Thread(target=self._run, daemon=True)
+
+    def start(self):
+        self.thread.start()
+        return self
+
+    def _run(self):
+        while not self._stop.wait(self.interval):
+            self.beat_fn(time.time())
+
+    def stop(self):
+        self._stop.set()
+        self.thread.join(timeout=2)
+
+
+class EmergencySaver:
+    """Installs SIGTERM/SIGINT handlers that run a checkpoint callback
+    before exit (preemption-safe training)."""
+
+    def __init__(self, save_fn: Callable[[], None]):
+        self.save_fn = save_fn
+        self.triggered = False
+        self._orig = {}
+
+    def install(self):
+        for sig in (signal.SIGTERM, signal.SIGINT):
+            self._orig[sig] = signal.getsignal(sig)
+            signal.signal(sig, self._handler)
+        return self
+
+    def _handler(self, signum, frame):
+        if not self.triggered:
+            self.triggered = True
+            self.save_fn()
+        orig = self._orig.get(signum)
+        if callable(orig):
+            orig(signum, frame)
+
+    def uninstall(self):
+        for sig, h in self._orig.items():
+            signal.signal(sig, h)
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticPlan:
+    """Decision record for an elastic restart: given surviving devices,
+    choose the largest feasible mesh and the resharding strategy."""
+
+    old_shape: tuple
+    new_shape: tuple
+    reshard: bool
+
+    @staticmethod
+    def plan(old_shape: tuple, n_devices: int, *, model_axis: int
+             ) -> "ElasticPlan":
+        """Keep the model axis (TP degree is architecture-determined),
+        shrink the data axis to what the surviving devices support."""
+        model = old_shape[model_axis]
+        data = max(1, n_devices // model)
+        new = list(old_shape)
+        # fold everything that isn't the model axis into data
+        for i in range(len(new)):
+            if i != model_axis:
+                new[i] = 1
+        new[0 if model_axis != 0 else 1] = data
+        return ElasticPlan(old_shape=old_shape, new_shape=tuple(new),
+                           reshard=tuple(new) != old_shape)

@@ -1,0 +1,75 @@
+"""Pallas TPU direct-conv kernel (stride-1 SAME, NCHW).
+
+TPU-native realization of the paper's tiled CNN (Listing 3) at the
+HBM->VMEM level: grid (i, j, q) over (batch tiles, k tiles, c slabs); the
+Out tile stays resident in a VMEM f32 scratch across the sequential c slabs
+(the paper's "store Out once" schedule), while In/Ker tiles stream in.
+
+The stencil is reassociated into ``kh*kw`` MXU matmuls of shape
+``(Tb*H*W, Tc) @ (Tc, Tk)`` — shifted-window slices of the padded input
+against the (r, s) slice of the kernel — so the systolic array sees a
+contraction dim of Tc (>=128 where possible; see kernels/tiling.py for why
+we deviate from the paper's T_c = 1 on TPU).
+
+Spatial dims stay whole inside the block (DL feature maps at these sizes
+fit VMEM comfortably; blocking h/w would need overlapping halo reads that
+Pallas blocked indexing cannot express).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _conv_kernel(x_ref, w_ref, o_ref, acc_ref, *, n_c: int, kh: int, kw: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    tb, tc, hp, wp = x_ref.shape
+    tk = w_ref.shape[0]
+    h, w = hp - kh + 1, wp - kw + 1
+    acc = jnp.zeros((tb * h * w, tk), jnp.float32)
+    for r in range(kh):
+        for s in range(kw):
+            patch = x_ref[:, :, r:r + h, s:s + w]            # [Tb,Tc,H,W]
+            lhs = patch.transpose(0, 2, 3, 1).reshape(tb * h * w, tc)
+            rhs = w_ref[:, :, r, s].transpose(1, 0)          # [Tc,Tk]
+            acc += jnp.dot(lhs, rhs, preferred_element_type=jnp.float32)
+    acc_ref[...] += acc.reshape(tb, h, w, tk).transpose(0, 3, 1, 2)
+
+    @pl.when(pl.program_id(2) == n_c - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def conv2d_pallas(x: jax.Array, w: jax.Array, *, block_b: int = 8,
+                  block_k: int = 128, block_c: int = 128,
+                  interpret: bool = False) -> jax.Array:
+    """stride-1 SAME conv: x [N,C,H,W], w [K,C,kh,kw] -> [N,K,H,W]."""
+    n, c, h, wd = x.shape
+    k, c2, kh, kw = w.shape
+    assert c == c2
+    bb, bk, bc = min(block_b, n), min(block_k, k), min(block_c, c)
+    assert n % bb == 0 and k % bk == 0 and c % bc == 0, (n, k, c, bb, bk, bc)
+    ph, pw = (kh - 1) // 2, (kw - 1) // 2
+    xp = jnp.pad(x, ((0, 0), (0, 0), (ph, kh - 1 - ph), (pw, kw - 1 - pw)))
+    hp, wp = xp.shape[2], xp.shape[3]
+    n_c = c // bc
+    return pl.pallas_call(
+        functools.partial(_conv_kernel, n_c=n_c, kh=kh, kw=kw),
+        grid=(n // bb, k // bk, n_c),
+        in_specs=[
+            pl.BlockSpec((bb, bc, hp, wp), lambda i, j, q: (i, q, 0, 0)),
+            pl.BlockSpec((bk, bc, kh, kw), lambda i, j, q: (j, q, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, bk, h, wd), lambda i, j, q: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, k, h, wd), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bb, bk, h, wd), jnp.float32)],
+        interpret=interpret,
+    )(xp, w)

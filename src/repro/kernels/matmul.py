@@ -1,0 +1,54 @@
+"""Pallas TPU matmul kernel — the 1x1-stencil specialization of the paper's
+tiled operator, with BlockSpec tiles from `kernels.tiling.plan_blocks`.
+
+Grid (i, j, r) over (M/bm, N/bn, K/bk); the output block (i, j) stays
+resident in VMEM across the sequential r steps (accumulating in an f32
+scratch), which is exactly the paper's "Out stays resident, In/Ker stream"
+schedule (Listing 3) at the HBM->VMEM level.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref, acc_ref, *, n_k: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(x_ref[...], w_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == n_k - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def matmul_pallas(x: jax.Array, w: jax.Array, *, block_m: int = 128,
+                  block_n: int = 128, block_k: int = 256,
+                  interpret: bool = False) -> jax.Array:
+    """[M, K] @ [K, N] -> [M, N] (x.dtype), f32 accumulation."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2
+    bm, bn, bk = min(block_m, m), min(block_n, n), min(block_k, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k, bm, bn, bk)
+    n_k = k // bk
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, n_k=n_k),
+        grid=(m // bm, n // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, r: (i, r)),
+            pl.BlockSpec((bk, bn), lambda i, j, r: (r, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, r: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, w)

@@ -1,0 +1,73 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Block shapes default to the paper-derived plan (`kernels.tiling`).  On CPU
+(this container) the kernels execute in interpret mode; on TPU they compile
+to Mosaic.  `use_pallas=False` falls back to the XLA ops — the dispatch the
+framework uses for dtypes/shapes the kernels don't cover.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.problem import ConvProblem
+from repro.kernels import tiling
+from repro.kernels.conv2d import conv2d_pallas
+from repro.kernels.matmul import matmul_pallas
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k"))
+def matmul(x: jax.Array, w: jax.Array, *, block_m: int = 0, block_n: int = 0,
+           block_k: int = 0) -> jax.Array:
+    """Paper-planned tiled matmul.  Shapes must divide by the chosen blocks
+    (the planner only returns divisors of MXU-aligned extents)."""
+    m, k = x.shape
+    _, n = w.shape
+    if not (block_m and block_n and block_k):
+        bm, bn, bk = tiling.matmul_blocks(m, n, k)
+        # fall back to exact divisors
+        block_m = bm if m % bm == 0 else math_gcd_block(m, bm)
+        block_n = bn if n % bn == 0 else math_gcd_block(n, bn)
+        block_k = bk if k % bk == 0 else math_gcd_block(k, bk)
+    return matmul_pallas(x, w, block_m=block_m, block_n=block_n,
+                         block_k=block_k, interpret=_on_cpu())
+
+
+def math_gcd_block(extent: int, want: int) -> int:
+    """Largest divisor of ``extent`` not exceeding ``want``."""
+    d = min(want, extent)
+    while extent % d != 0:
+        d -= 1
+    return d
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_k", "block_c",
+                                              "use_pallas"))
+def conv2d_same(x: jax.Array, w: jax.Array, *, block_b: int = 0,
+                block_k: int = 0, block_c: int = 0,
+                use_pallas: bool = True) -> jax.Array:
+    """stride-1 SAME conv, NCHW/OIHW."""
+    if not use_pallas:
+        return lax.conv_general_dilated(
+            x, w, (1, 1), "SAME",
+            dimension_numbers=("NCHW", "OIHW", "NCHW"),
+            preferred_element_type=jnp.float32).astype(x.dtype)
+    n, c, h, wd = x.shape
+    k, _, kh, kw = w.shape
+    if not (block_b and block_k and block_c):
+        prob = ConvProblem.from_conv_layer(batch=n, cin=c, cout=k, h=h, w=wd,
+                                           kh=kh, kw=kw)
+        plan = tiling.plan_blocks(prob)
+        block_b = math_gcd_block(n, max(1, plan.block_bhw // (h * wd)))
+        block_k = math_gcd_block(k, plan.block_k)
+        block_c = math_gcd_block(c, plan.block_c)
+    return conv2d_pallas(x, w, block_b=block_b, block_k=block_k,
+                         block_c=block_c, interpret=_on_cpu())

@@ -1,0 +1,64 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Deliberately written as explicit index arithmetic / einsums (not
+``lax.conv``), so they are an independent reference implementation.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ref_matmul(x: jax.Array, w: jax.Array) -> jax.Array:
+    """[M, C] @ [C, N] with f32 accumulation, result in x.dtype."""
+    return jnp.einsum("mc,cn->mn", x.astype(jnp.float32),
+                      w.astype(jnp.float32)).astype(x.dtype)
+
+
+def ref_conv2d(x: jax.Array, w: jax.Array, *, stride: int = 1,
+               padding: str = "SAME") -> jax.Array:
+    """NCHW x OIHW stride-``stride`` conv via explicit stencil shifts.
+
+    Out[n,k,h,w] = sum_{c,r,s} In[n,c,stride*h+r,stride*w+s] * Ker[k,c,r,s]
+    """
+    n, c, h_in, w_in = x.shape
+    k, c2, kh, kw = w.shape
+    assert c == c2
+    if padding == "SAME":
+        assert stride == 1
+        ph, pw = (kh - 1) // 2, (kw - 1) // 2
+        x = jnp.pad(x, ((0, 0), (0, 0), (ph, kh - 1 - ph), (pw, kw - 1 - pw)))
+        h_out, w_out = h_in, w_in
+    elif padding == "VALID":
+        h_out = (h_in - kh) // stride + 1
+        w_out = (w_in - kw) // stride + 1
+    else:
+        raise ValueError(padding)
+
+    out = jnp.zeros((n, k, h_out, w_out), jnp.float32)
+    for r in range(kh):
+        for s in range(kw):
+            patch = x[:, :, r:r + stride * (h_out - 1) + 1:stride,
+                      s:s + stride * (w_out - 1) + 1:stride]
+            out = out + jnp.einsum(
+                "nchw,kc->nkhw", patch.astype(jnp.float32),
+                w[:, :, r, s].astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def ref_flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True,
+                        scale: float | None = None) -> jax.Array:
+    """[B, H, S, D] attention oracle in f32."""
+    b, h, s, d = q.shape
+    scale = scale if scale is not None else d ** -0.5
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((s, k.shape[2]), bool),
+                        k.shape[2] - s)
+        logits = jnp.where(mask, logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,80 @@
+"""VMEM BlockSpec sizing via the paper's Eq. 4 optimizer.
+
+The paper's two-level model applies *twice* on TPU (DESIGN.md §3).  This is
+the chip level: fast memory = VMEM, slow memory = HBM, "processors" = the
+sequential grid steps (P = 1).  The optimizer picks (T_bhw, T_k) minimizing
+HBM traffic; we then project onto MXU-aligned integers (multiples of 128 on
+the matmul dims, or the full extent when smaller).
+
+TPU adaptation recorded in DESIGN.md §6: the paper's T_c = 1 is
+movement-optimal but starves the 128x128 systolic array, so the contraction
+block is floored at min(N_c, 256) and the Eq. 4 budget reduced accordingly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Tuple
+
+from repro.core import cost_model, tile_optimizer
+from repro.core.problem import ConvProblem
+
+# v5e-ish VMEM budget in ELEMENTS (bf16): ~128MB total; keep half for
+# double-buffering and the compiler.
+VMEM_ELEMS_BUDGET = 16 * 1024 * 1024
+
+
+def _align(x: float, mult: int, hi: int) -> int:
+    """Round to a multiple of ``mult``, clamped to [mult, hi] (or hi if the
+    extent itself is smaller than one multiple)."""
+    if hi <= mult:
+        return hi
+    v = int(max(mult, round(x / mult) * mult))
+    return min(v, (hi // mult) * mult)
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockPlan:
+    block_bhw: int     # rows of the (bhw) x k output tile
+    block_k: int       # output-feature block
+    block_c: int       # contraction block (TPU floor, see module doc)
+    vmem_elems: float  # modeled footprint
+    hbm_traffic: float # modeled HBM<->VMEM elements moved (Eq. 4 cost)
+
+
+def plan_blocks(p: ConvProblem, *, vmem_elems: int = VMEM_ELEMS_BUDGET,
+                mxu: int = 128) -> BlockPlan:
+    """Block sizes for the conv/matmul kernels from the paper's model."""
+    block_c = min(p.Nc, 256)
+    # Budget left for the (bhw, k) tiles after the contraction slabs
+    # (In tile scales with block_c, Ker tile with block_c * stencil).
+    # Solve Eq. 4 with P=1 on the reduced budget.
+    sol = tile_optimizer.solve_closed_form(
+        p, P=1, M=max(4 * mxu * mxu, vmem_elems // max(1, 2 * block_c // 128)),
+        ml_correction=True)
+    tbhw = _align(sol.choice.Tbhw, mxu, p.Nbhw)
+    tk = _align(sol.choice.Tk, mxu, p.Nk)
+    in_tile = p.sh * p.sw * tbhw * block_c
+    ker_tile = p.Nr * p.Ns * tk * block_c
+    out_tile = tbhw * tk
+    foot = in_tile + ker_tile + out_tile
+    # shrink until the true footprint fits
+    while foot > vmem_elems and (tbhw > mxu or tk > mxu):
+        if tbhw >= tk and tbhw > mxu:
+            tbhw = max(mxu, tbhw // 2)
+        elif tk > mxu:
+            tk = max(mxu, tk // 2)
+        else:
+            break
+        foot = (p.sh * p.sw * tbhw * block_c + p.Nr * p.Ns * tk * block_c
+                + tbhw * tk)
+    cost = cost_model.cost_simplified(p, 1, p.Nbhw, p.Nk, tbhw, tk)
+    return BlockPlan(block_bhw=tbhw, block_k=tk, block_c=block_c,
+                     vmem_elems=foot, hbm_traffic=cost)
+
+
+def matmul_blocks(m: int, n: int, k: int, *,
+                  vmem_elems: int = VMEM_ELEMS_BUDGET) -> Tuple[int, int, int]:
+    plan = plan_blocks(ConvProblem.from_matmul(m, n, k), vmem_elems=vmem_elems)
+    return plan.block_bhw, plan.block_k, plan.block_c

@@ -1,0 +1,361 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production mesh (16x16 single-pod / 2x16x16 multi-pod) with 512 CPU
+placeholder devices, and extract the roofline terms from the compiled
+artifact.
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3.2-1b --shape train_4k
+  python -m repro.launch.dryrun --arch all --shape all [--multi-pod]
+  ... each cell writes results/dryrun/<arch>_<shape>_<mesh>.json
+"""
+
+import argparse
+import functools
+import json
+import re
+import sys
+import time
+import traceback
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, ALIASES, get_config
+from repro.launch.hlo_analysis import analyze_hlo
+from repro.launch.mesh import make_production_mesh
+from repro.launch.shapes import (SHAPES, cache_struct, cell_supported,
+                                 input_specs)
+from repro.models.api import model_fns
+from repro.parallel import sharding as shd
+from repro.train.optim import AdamW
+from repro.train.step import TrainState, init_train_state, make_train_step
+
+# ---------------------------------------------------------------- roofline
+PEAK_FLOPS = 197e12          # bf16 / chip (v5e-class)
+HBM_BW = 819e9               # B/s / chip
+LINK_BW = 50e9               # B/s / link (ICI)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"(\w+\[[^\]]*\][^=]*?)?=\s*(?:\w+\[[^\]]*\]\S*\s+)?"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum byte sizes of all shapes in a type string like
+    '(f32[8,128], bf16[4,4])' or 'bf16[2048,512]'."""
+    total = 0
+    for m in _SHAPE_RE.finditer(text):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, Any]:
+    """Per-op-type wire-byte totals from the post-SPMD HLO (per device).
+
+    Ring-model wire bytes per device for a group of size g over payload V:
+      all-gather: V*(g-1)/g (V = gathered result)
+      reduce-scatter: V*(g-1)/g (V = input)
+      all-reduce: 2*V*(g-1)/g
+      all-to-all: V*(g-1)/g
+      collective-permute: V
+    """
+    out = {k: 0.0 for k in ("all-reduce", "all-gather", "reduce-scatter",
+                            "all-to-all", "collective-permute")}
+    counts = {k: 0 for k in out}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|\S+?)\s+"
+                     r"(all-reduce|all-gather|reduce-scatter|all-to-all|"
+                     r"collective-permute)(?:-start)?\(", line)
+        if not m:
+            continue
+        result_type, op = m.group(1), m.group(2)
+        gm = re.search(r"replica_groups=\{?\{([\d,]+)\}", line)
+        if gm:
+            g = len(gm.group(1).split(","))
+        else:
+            gm2 = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+            g = int(gm2.group(2)) if gm2 else 2
+        v = _shape_bytes(result_type)
+        if op == "all-gather":
+            wire = v * (g - 1) / max(g, 1)
+        elif op == "reduce-scatter":
+            wire = v * (g - 1)  # result is the scattered shard: in = v*g
+        elif op == "all-reduce":
+            wire = 2 * v * (g - 1) / max(g, 1)
+        elif op == "all-to-all":
+            wire = v * (g - 1) / max(g, 1)
+        else:  # collective-permute
+            wire = v
+        out[op] += wire
+        counts[op] += 1
+    return {"wire_bytes": out, "counts": counts,
+            "total_wire_bytes": sum(out.values())}
+
+
+# ---------------------------------------------------------------- lowering
+
+def build_train(cfg, mesh, shape_name):
+    from repro.models import layers as _L
+    fns = model_fns(cfg)
+    batch = input_specs(cfg, shape_name)
+    sp = SHAPES[shape_name]
+    tokens_per_step = sp.global_batch * sp.seq_len
+
+    params_shape = jax.eval_shape(
+        lambda: fns.init(jax.random.PRNGKey(0), cfg))
+    pspecs = shd.param_specs(cfg, params_shape, mesh,
+                             tokens_per_step=tokens_per_step)
+    # pure-DP regimes fold the model axis into the batch axes (the paper's
+    # P_bhw = P prescription for memory-light models)
+    dp_all = shd.pure_dp(shd.param_specs.last_decisions)
+    _L.set_attention_mesh(
+        mesh, ("pod", "data", "model") if dp_all else ("pod", "data"))
+    opt = AdamW(lr=3e-4)
+    state_shape = jax.eval_shape(
+        lambda: init_train_state(
+            jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                         params_shape), opt))
+    sspecs = TrainState(
+        params=pspecs,
+        opt=type(state_shape.opt)(step=jax.sharding.PartitionSpec(),
+                                  m=pspecs, v=pspecs),
+        err=None)
+    bspecs = shd.batch_specs(cfg, mesh, batch,
+                             global_batch=sp.global_batch,
+                             include_model=dp_all)
+    loss_fn = functools.partial(_loss_dispatch, cfg=cfg, fns=fns)
+    train_step = make_train_step(loss_fn, opt)
+    mspec = jax.sharding.PartitionSpec()
+    out_specs = (sspecs, {"loss": mspec, "grad_norm": mspec, "step": mspec})
+    jitted = jax.jit(train_step,
+                     in_shardings=(shd.named(mesh, sspecs),
+                                   shd.named(mesh, bspecs)),
+                     out_shardings=jax.tree.map(
+                         lambda s: jax.sharding.NamedSharding(mesh, s),
+                         out_specs,
+                         is_leaf=lambda x: isinstance(
+                             x, jax.sharding.PartitionSpec)),
+                     donate_argnums=0)
+    return jitted, (state_shape, batch)
+
+
+def _loss_dispatch(params, batch, *, cfg, fns):
+    return fns.loss(params, cfg, batch)
+
+
+def build_decode(cfg, mesh, shape_name):
+    from repro.models import layers as _L
+    fns = model_fns(cfg)
+    sp = SHAPES[shape_name]
+    toks = input_specs(cfg, shape_name)
+    cache = cache_struct(cfg, shape_name)
+    params_shape = jax.eval_shape(
+        lambda: fns.init(jax.random.PRNGKey(0), cfg))
+    pspecs = shd.param_specs(cfg, params_shape, mesh,
+                             tokens_per_step=sp.global_batch, train=False)
+    dp_all = shd.pure_dp(shd.param_specs.last_decisions)
+    _L.set_attention_mesh(
+        mesh, ("pod", "data", "model") if dp_all else ("pod", "data"))
+    cspecs = shd.cache_specs(cfg, mesh, cache, batch=sp.global_batch,
+                             include_model=dp_all)
+    tspecs = shd.batch_specs(cfg, mesh, toks, global_batch=sp.global_batch,
+                             include_model=dp_all)
+
+    def serve_step(params, cache, batch):
+        return fns.decode_step(params, cfg, cache, batch["tokens"])
+
+    logits_spec = jax.sharding.PartitionSpec()
+    jitted = jax.jit(
+        serve_step,
+        in_shardings=(shd.named(mesh, pspecs), shd.named(mesh, cspecs),
+                      shd.named(mesh, tspecs)),
+        out_shardings=(jax.sharding.NamedSharding(mesh, logits_spec),
+                       shd.named(mesh, cspecs)),
+        donate_argnums=1)
+    return jitted, (params_shape, cache, toks)
+
+
+def build_prefill(cfg, mesh, shape_name):
+    from repro.models import layers as _L
+    fns = model_fns(cfg)
+    sp = SHAPES[shape_name]
+    inputs = input_specs(cfg, shape_name)
+    cache = cache_struct(cfg, shape_name)
+    params_shape = jax.eval_shape(
+        lambda: fns.init(jax.random.PRNGKey(0), cfg))
+    pspecs = shd.param_specs(
+        cfg, params_shape, mesh,
+        tokens_per_step=sp.global_batch * sp.seq_len, train=False)
+    dp_all = shd.pure_dp(shd.param_specs.last_decisions)
+    _L.set_attention_mesh(
+        mesh, ("pod", "data", "model") if dp_all else ("pod", "data"))
+    cspecs = shd.cache_specs(cfg, mesh, cache, batch=sp.global_batch,
+                             include_model=dp_all)
+    ispecs = shd.batch_specs(cfg, mesh, inputs,
+                             global_batch=sp.global_batch,
+                             include_model=dp_all)
+
+    if cfg.family == "encdec":
+        def prefill_step(params, cache, batch):
+            return fns.prefill(params, cfg, cache, batch["frames"],
+                               batch["tokens"])
+    else:
+        def prefill_step(params, cache, batch):
+            return fns.prefill(params, cfg, cache, batch["tokens"])
+
+    logits_spec = jax.sharding.PartitionSpec()
+    jitted = jax.jit(
+        prefill_step,
+        in_shardings=(shd.named(mesh, pspecs), shd.named(mesh, cspecs),
+                      shd.named(mesh, ispecs)),
+        out_shardings=(jax.sharding.NamedSharding(mesh, logits_spec),
+                       shd.named(mesh, cspecs)),
+        donate_argnums=1)
+    return jitted, (params_shape, cache, inputs)
+
+
+# ------------------------------------------------------------------ runner
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             out_dir: str = "results/dryrun") -> Dict[str, Any]:
+    cfg = get_config(arch)
+    ok, why = cell_supported(cfg, shape_name)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    rec: Dict[str, Any] = {"arch": arch, "shape": shape_name,
+                           "mesh": mesh_name}
+    if not ok:
+        rec["status"] = "skipped"
+        rec["reason"] = why
+        return _write(rec, out_dir)
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    sp = SHAPES[shape_name]
+    t0 = time.time()
+    with jax.set_mesh(mesh):
+        if sp.kind == "train":
+            jitted, args = build_train(cfg, mesh, shape_name)
+        elif sp.kind == "prefill":
+            jitted, args = build_prefill(cfg, mesh, shape_name)
+        else:
+            jitted, args = build_decode(cfg, mesh, shape_name)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    static = analyze_hlo(compiled.as_text())
+    print(mem)
+    print({k: v for k, v in cost.items()
+           if k in ("flops", "bytes accessed")})
+
+    n_dev = 512 if multi_pod else 256
+    flops_dev = float(static["flops"])
+    bytes_dev = float(static["hbm_bytes"])
+    coll = {"wire_bytes": static["wire_bytes"],
+            "counts": static["coll_counts"],
+            "total_wire_bytes": static["total_wire_bytes"]}
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = bytes_dev / HBM_BW
+    t_coll = coll["total_wire_bytes"] / LINK_BW
+
+    # useful model FLOPs per device
+    tokens = sp.global_batch * (sp.seq_len if sp.kind != "decode" else 1)
+    n_active = cfg.active_param_count()
+    mult = 6 if sp.kind == "train" else 2
+    model_flops_dev = mult * n_active * tokens / n_dev
+
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    dominant = max(terms, key=terms.get)
+    rec.update({
+        "status": "ok",
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "flops_per_device": flops_dev,
+        "bytes_per_device": bytes_dev,
+        "xla_cost_analysis": {"flops": float(cost.get("flops", 0.0)),
+                              "bytes": float(cost.get("bytes accessed",
+                                                      0.0))},
+        "collectives": coll,
+        "memory_analysis": {
+            k: getattr(mem, k) for k in
+            ("argument_size_in_bytes", "output_size_in_bytes",
+             "temp_size_in_bytes", "generated_code_size_in_bytes")
+            if hasattr(mem, k)},
+        **{f"roofline_{k}": v for k, v in terms.items()},
+        "dominant": dominant,
+        "model_flops_per_device": model_flops_dev,
+        "useful_flops_ratio": (model_flops_dev / flops_dev
+                               if flops_dev else None),
+        "tp_decisions": getattr(shd.param_specs, "last_decisions", {}),
+    })
+    return _write(rec, out_dir)
+
+
+def _write(rec, out_dir):
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(
+        out_dir, f"{rec['arch']}_{rec['shape']}_{rec['mesh']}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1, default=str)
+    status = rec.get("status")
+    print(f"[dryrun] {rec['arch']} {rec['shape']} {rec['mesh']}: {status} "
+          + (f"(dominant={rec.get('dominant')})" if status == "ok" else
+             rec.get("reason", rec.get("error", ""))[:200]))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True,
+                    help="arch id or 'all'")
+    ap.add_argument("--shape", default="all",
+                    choices=list(SHAPES) + ["all"])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+
+    archs = list(ALIASES) if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                try:
+                    run_cell(arch, shape, multi_pod=mp, out_dir=args.out)
+                except Exception:
+                    failures += 1
+                    rec = {"arch": arch, "shape": shape,
+                           "mesh": "2x16x16" if mp else "16x16",
+                           "status": "error",
+                           "error": traceback.format_exc()}
+                    _write(rec, args.out)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,481 @@
+"""Static analysis of post-SPMD compiled HLO: exact per-device FLOPs, HBM
+traffic and collective wire bytes, with while-loop bodies multiplied by
+their trip counts (XLA's own cost_analysis counts loop bodies ONCE, which
+undercounts scanned transformer stacks by ~n_layers).
+
+This is the dry-run "profiler": every roofline number in EXPERIMENTS.md
+comes from `analyze_hlo(compiled.as_text())`.
+
+Accounting model:
+  flops   — dot: 2*|result|*prod(contracting dims); conv: 2*|out|*cin*k;
+            elementwise/reduce: |result| (floor; dots dominate);
+            while: cond*(T+1) + body*T; fusion/call: callee; conditional:
+            max over branches.
+  hbm     — fusion-boundary traffic: operands + result bytes of top-level
+            (unfused) ops; copies count twice; parameters/tuples free.
+  wire    — ring model per collective: all-gather/reduce-scatter/all-to-all
+            V*(g-1)/g, all-reduce 2*V*(g-1)/g, collective-permute V
+            (V = payload bytes, g = replica-group size).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+?)\s+([a-z][\w\-]*)\((.*)$")
+_COMP_HDR_RE = re.compile(
+    r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*->.*\{\s*$")
+_CALLS_RE = re.compile(r"calls=%?([\w\.\-]+)")
+_WHILE_RE = re.compile(r"condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_TO_APPLY_RE = re.compile(r"to_apply=%?([\w\.\-]+)")
+_GROUPS_ITOA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_EXPL_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_CONST_RE = re.compile(r"=\s*s32\[\]\s*constant\((\d+)\)")
+
+ELEMENTWISE_FREE = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota", "reshape",
+}
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def shape_elems(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        n = 1
+        for d in m.group(2).split(","):
+            if d:
+                n *= int(d)
+        total += n
+    return total
+
+
+def shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt = m.group(1)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in m.group(2).split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    rtype: str
+    opcode: str
+    rest: str  # everything after the opening paren
+
+
+@dataclasses.dataclass
+class Totals:
+    flops: float = 0.0
+    hbm: float = 0.0
+    wire: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in COLLECTIVES})
+    coll_counts: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in COLLECTIVES})
+
+    def add(self, other: "Totals", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.hbm += other.hbm * mult
+        for k in COLLECTIVES:
+            self.wire[k] += other.wire[k] * mult
+            self.coll_counts[k] += other.coll_counts[k] * mult
+
+    @property
+    def total_wire(self) -> float:
+        return sum(self.wire.values())
+
+
+class HloModule:
+    def __init__(self, text: str):
+        self.comps: Dict[str, List[Op]] = {}
+        self.entry: Optional[str] = None
+        self._parse(text)
+        self._memo: Dict[str, Totals] = {}
+
+    def _parse(self, text: str):
+        cur: Optional[str] = None
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            if cur is None:
+                m = _COMP_HDR_RE.match(line.strip())
+                if m and "->" in line:
+                    cur = m.group(1)
+                    self.comps[cur] = []
+                    if line.strip().startswith("ENTRY"):
+                        self.entry = cur
+                continue
+            if line.strip() == "}":
+                cur = None
+                continue
+            m = _OP_RE.match(line)
+            if m:
+                self.comps[cur].append(
+                    Op(name=m.group(1), rtype=m.group(2).strip(),
+                       opcode=m.group(3), rest=m.group(4)))
+
+    # ---------------------------------------------------------------- util
+    def _symtab(self, comp: str) -> Dict[str, str]:
+        return {op.name: op.rtype for op in self.comps.get(comp, [])}
+
+    def _operand_refs(self, op: Op) -> List[str]:
+        depth, args = 1, op.rest
+        end = len(args)
+        for i, ch in enumerate(args):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        return re.findall(r"%?([\w\.\-]+)", args[:end])
+
+    def _operand_bytes(self, op: Op, symtab: Dict[str, str]) -> int:
+        return sum(shape_bytes(symtab[r]) for r in self._operand_refs(op)
+                   if r in symtab)
+
+    def _fusion_hbm(self, op: Op, callee: str,
+                    symtab: Dict[str, str]) -> float:
+        """Slice-aware fusion-boundary traffic.
+
+        A fused-computation parameter consumed only by dynamic-slice /
+        gather reads only the slice (scan weight indexing, cache reads);
+        a root that is dynamic-update-slice writes only the update (cache
+        writes, scan stacking) — charging full buffers there overcharges
+        scanned layers by O(n_layers).
+        """
+        body = self.comps.get(callee, [])
+        bsym = {o.name: o.rtype for o in body}
+        # map param index -> param op name
+        params = {}
+        for o in body:
+            if o.opcode == "parameter":
+                m = re.match(r"(\d+)\)", o.rest)
+                if m:
+                    params[int(m.group(1))] = o.name
+        # consumers of each param (transitively through bitcasts; track
+        # whether a param is solely the in-place destination of a
+        # dynamic-update-slice — aliased, zero traffic)
+        all_consumers: Dict[str, List[Tuple[Op, int]]] = {}
+        for o in body:
+            if o.opcode == "parameter":
+                continue
+            for j, r in enumerate(self._operand_refs(o)):
+                all_consumers.setdefault(r, []).append((o, j))
+
+        def effective(name) -> List[Tuple[Op, int]]:
+            out, stack, seen = [], [name], set()
+            while stack:
+                nm = stack.pop()
+                if nm in seen:
+                    continue
+                seen.add(nm)
+                for o, j in all_consumers.get(nm, []):
+                    if o.opcode == "bitcast":
+                        stack.append(o.name)
+                    else:
+                        out.append((o, j))
+            return out
+
+        consumers: Dict[str, List[Op]] = {}
+        dus_dest: Dict[str, bool] = {}
+        for p in params.values():
+            eff = effective(p)
+            consumers[p] = [o for o, _ in eff]
+            dus_dest[p] = bool(eff) and all(
+                o.opcode == "dynamic-update-slice" and j == 0
+                for o, j in eff)
+        total = 0.0
+        # operand side
+        operand_list = [r for r in self._operand_refs(op) if r in symtab]
+        for i, ref in enumerate(operand_list):
+            pname = params.get(i)
+            cons = consumers.get(pname, []) if pname else []
+            if cons and dus_dest.get(pname, False):
+                pass  # in-place DUS destination: aliased, no read traffic
+            elif cons and all(c.opcode in ("dynamic-slice", "gather")
+                              for c in cons):
+                total += sum(shape_bytes(c.rtype) for c in cons)
+            else:
+                total += shape_bytes(symtab[ref])
+        # result side: DUS roots write the update, not the full buffer
+        root = next((o for o in body if o.opcode == "dynamic-update-slice"),
+                    None)
+        root_is_dus = body and (
+            body[-1].opcode == "dynamic-update-slice"
+            or (body[-1].opcode == "tuple" and root is not None))
+        if root_is_dus:
+            dus_updates = 0.0
+            for o in body:
+                if o.opcode == "dynamic-update-slice":
+                    refs = self._operand_refs(o)
+                    if len(refs) >= 2 and refs[1] in bsym:
+                        dus_updates += shape_bytes(bsym[refs[1]])
+            total += dus_updates if dus_updates else shape_bytes(op.rtype)
+        else:
+            total += shape_bytes(op.rtype)
+        return total
+
+    def _trip_count(self, cond_comp: str) -> int:
+        best = 1
+        for op in self.comps.get(cond_comp, []):
+            if op.opcode == "constant" and op.rtype.startswith("s32[]"):
+                mm = re.match(r"(\d+)\)", op.rest)
+                if mm:
+                    best = max(best, int(mm.group(1)))
+        return best
+
+    def _group_size(self, rest: str) -> int:
+        m = _GROUPS_ITOA_RE.search(rest)
+        if m:
+            return int(m.group(2))
+        m = _GROUPS_EXPL_RE.search(rest)
+        if m:
+            return len(m.group(1).split(","))
+        return 2
+
+    # ------------------------------------------------------------- analyze
+    def analyze(self, comp: Optional[str] = None, *,
+                count_hbm: bool = True) -> Totals:
+        comp = comp or self.entry
+        if comp in self._memo:
+            return self._memo[comp]
+        t = Totals()
+        self._memo[comp] = t  # cycle guard
+        symtab = self._symtab(comp)
+        fused = comp.startswith("fused_") or ".fused" in comp
+        for op in self.comps.get(comp, []):
+            oc = op.opcode
+            if oc == "while":
+                m = _WHILE_RE.search(op.rest)
+                if m:
+                    trips = self._trip_count(m.group(1))
+                    t.add(self.analyze(m.group(1)), trips + 1)
+                    t.add(self.analyze(m.group(2)), trips)
+                continue
+            if oc == "conditional":
+                m = _BRANCHES_RE.search(op.rest)
+                if m:
+                    subs = [self.analyze(c.strip().lstrip("%"))
+                            for c in m.group(1).split(",")]
+                    if subs:
+                        best = max(subs, key=lambda s: s.flops)
+                        t.add(best)
+                continue
+            if oc == "fusion":
+                m = _CALLS_RE.search(op.rest)
+                if m:
+                    sub = self.analyze(m.group(1))
+                    t.flops += sub.flops          # flops recurse
+                    for k in COLLECTIVES:         # (no collectives inside)
+                        t.wire[k] += sub.wire[k]
+                        t.coll_counts[k] += sub.coll_counts[k]
+                    if count_hbm:
+                        t.hbm += self._fusion_hbm(op, m.group(1), symtab)
+                elif count_hbm:
+                    t.hbm += shape_bytes(op.rtype) \
+                        + self._operand_bytes(op, symtab)
+                continue
+            if oc in ("call", "async-start"):
+                m = _CALLS_RE.search(op.rest) or _TO_APPLY_RE.search(op.rest)
+                if m:
+                    t.add(self.analyze(m.group(1)))
+                continue
+            if oc.startswith(COLLECTIVES):
+                base = next(c for c in COLLECTIVES if oc.startswith(c))
+                if oc.endswith("-done"):
+                    continue
+                g = self._group_size(op.rest)
+                v = shape_bytes(op.rtype)
+                if base == "all-reduce":
+                    wire = 2 * v * (g - 1) / max(g, 1)
+                elif base == "collective-permute":
+                    wire = v
+                else:
+                    wire = v * (g - 1) / max(g, 1)
+                t.wire[base] += wire
+                t.coll_counts[base] += 1
+                if count_hbm:
+                    t.hbm += 2 * v
+                continue
+            # compute ops
+            if oc == "dot":
+                m = _CONTRACT_RE.search(op.rest)
+                lhs_ref = re.match(r"\s*%?([\w\.\-]+)", op.rest)
+                contract = 1
+                if m and lhs_ref and lhs_ref.group(1) in symtab:
+                    dims = [int(x) for x in m.group(1).split(",") if x]
+                    lhs_shape = _SHAPE_RE.search(symtab[lhs_ref.group(1)])
+                    if lhs_shape:
+                        sizes = [int(x) for x in
+                                 lhs_shape.group(2).split(",") if x]
+                        for dd in dims:
+                            if dd < len(sizes):
+                                contract *= sizes[dd]
+                t.flops += 2.0 * shape_elems(op.rtype) * contract
+            elif oc == "convolution":
+                rhs_refs = re.findall(r"%?([\w\.\-]+)", op.rest[:200])
+                kflops = 1
+                for ref in rhs_refs[1:2]:
+                    if ref in symtab:
+                        sh = _SHAPE_RE.search(symtab[ref])
+                        if sh:
+                            sizes = [int(x) for x in
+                                     sh.group(2).split(",") if x]
+                            if sizes:
+                                # OIHW-ish: all but the output-feature dim
+                                kflops = max(1, int(
+                                    round(float(
+                                        __import__("math").prod(sizes))
+                                        / max(sizes[0], 1))))
+                t.flops += 2.0 * shape_elems(op.rtype) * kflops
+            elif oc not in ELEMENTWISE_FREE:
+                t.flops += float(shape_elems(op.rtype))
+            if count_hbm and not fused:
+                if oc in ("parameter", "constant", "tuple",
+                          "get-tuple-element", "bitcast"):
+                    pass
+                elif oc == "copy":
+                    t.hbm += 2 * shape_bytes(op.rtype)
+                elif oc in ("dynamic-slice", "gather"):
+                    t.hbm += 2 * shape_bytes(op.rtype)
+                elif oc == "dynamic-update-slice":
+                    refs = self._operand_refs(op)
+                    upd = (shape_bytes(symtab[refs[1]])
+                           if len(refs) >= 2 and refs[1] in symtab
+                           else shape_bytes(op.rtype))
+                    t.hbm += 2 * upd
+                else:
+                    t.hbm += shape_bytes(op.rtype) \
+                        + self._operand_bytes(op, symtab)
+        return t
+
+
+def analyze_hlo(text: str) -> Dict:
+    mod = HloModule(text)
+    t = mod.analyze()
+    return {
+        "flops": t.flops,
+        "hbm_bytes": t.hbm,
+        "wire_bytes": t.wire,
+        "coll_counts": t.coll_counts,
+        "total_wire_bytes": t.total_wire,
+        "n_computations": len(mod.comps),
+    }
+
+
+# --------------------------------------------------------------------------
+# Profiler: per-op contributions with loop multipliers — the dry-run
+# equivalent of a wall-clock profile, used by the §Perf hillclimb.
+# --------------------------------------------------------------------------
+
+def top_contributors(text: str, *, key: str = "hbm", n: int = 25):
+    """Returns [(value, multiplier, comp, opcode, name, rtype)] sorted desc.
+
+    ``key``: 'hbm' | 'flops' | 'wire'.  Values already include the product
+    of enclosing while-loop trip counts.
+    """
+    mod = HloModule(text)
+    rows = []
+
+    def visit(comp: str, mult: float, seen):
+        if comp in seen:
+            return
+        seen = seen | {comp}
+        symtab = mod._symtab(comp)
+        for op in mod.comps.get(comp, []):
+            oc = op.opcode
+            if oc == "while":
+                m = _WHILE_RE.search(op.rest)
+                if m:
+                    trips = mod._trip_count(m.group(1))
+                    visit(m.group(2), mult * trips, seen)
+                continue
+            if oc == "conditional":
+                m = _BRANCHES_RE.search(op.rest)
+                if m:
+                    for c in m.group(1).split(","):
+                        visit(c.strip().lstrip("%"), mult, seen)
+                continue
+            if oc in ("call", "async-start"):
+                m = _CALLS_RE.search(op.rest) or _TO_APPLY_RE.search(op.rest)
+                if m:
+                    visit(m.group(1), mult, seen)
+                continue
+            val = 0.0
+            if key == "wire":
+                if oc.startswith(COLLECTIVES) and not oc.endswith("-done"):
+                    base = next(c for c in COLLECTIVES if oc.startswith(c))
+                    g = mod._group_size(op.rest)
+                    v = shape_bytes(op.rtype)
+                    val = (2 * v * (g - 1) / g if base == "all-reduce"
+                           else v if base == "collective-permute"
+                           else v * (g - 1) / max(g, 1))
+            elif key == "flops":
+                if oc == "fusion":
+                    m = _CALLS_RE.search(op.rest)
+                    val = mod.analyze(m.group(1)).flops if m else 0.0
+                elif oc == "dot":
+                    val = _dot_flops(mod, op, symtab)
+            else:  # hbm
+                if oc == "fusion":
+                    m = _CALLS_RE.search(op.rest)
+                    val = mod._fusion_hbm(op, m.group(1), symtab) if m else 0
+                elif oc in ("dynamic-slice", "gather"):
+                    val = 2 * shape_bytes(op.rtype)
+                elif oc == "copy":
+                    val = 2 * shape_bytes(op.rtype)
+                elif oc in ELEMENTWISE_FREE or oc in (
+                        "parameter", "constant", "tuple",
+                        "get-tuple-element", "bitcast"):
+                    val = 0.0
+                elif oc == "dynamic-update-slice":
+                    refs = mod._operand_refs(op)
+                    val = 2 * (shape_bytes(symtab[refs[1]])
+                               if len(refs) >= 2 and refs[1] in symtab
+                               else shape_bytes(op.rtype))
+                else:
+                    val = shape_bytes(op.rtype) \
+                        + mod._operand_bytes(op, symtab)
+            if val:
+                rows.append((val * mult, mult, comp, oc, op.name,
+                             op.rtype[:70]))
+
+    visit(mod.entry, 1.0, frozenset())
+    rows.sort(reverse=True)
+    return rows[:n]
+
+
+def _dot_flops(mod: "HloModule", op: Op, symtab: Dict[str, str]) -> float:
+    m = _CONTRACT_RE.search(op.rest)
+    lhs_ref = re.match(r"\s*%?([\w\.\-]+)", op.rest)
+    contract = 1
+    if m and lhs_ref and lhs_ref.group(1) in symtab:
+        dims = [int(x) for x in m.group(1).split(",") if x]
+        lhs_shape = _SHAPE_RE.search(symtab[lhs_ref.group(1)])
+        if lhs_shape:
+            sizes = [int(x) for x in lhs_shape.group(2).split(",") if x]
+            for dd in dims:
+                if dd < len(sizes):
+                    contract *= sizes[dd]
+    return 2.0 * shape_elems(op.rtype) * contract

@@ -1,0 +1,123 @@
+"""Aggregate results/dryrun/*.json into the EXPERIMENTS.md roofline tables.
+
+  PYTHONPATH=src python -m repro.launch.report [--dir results/dryrun]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+ARCHS = ["llama3.2-1b", "smollm-360m", "gemma3-12b", "gemma3-4b",
+         "zamba2-7b", "xlstm-350m", "whisper-tiny", "granite-moe-1b-a400m",
+         "qwen3-moe-235b-a22b", "qwen2-vl-72b"]
+
+
+def load(dir_: str) -> Dict:
+    out = {}
+    for path in glob.glob(os.path.join(dir_, "*.json")):
+        r = json.load(open(path))
+        out[(r["arch"], r["shape"], r["mesh"])] = r
+    return out
+
+
+def fmt_s(x) -> str:
+    if x is None:
+        return "-"
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def roofline_table(recs: Dict, mesh: str) -> List[str]:
+    lines = [
+        "| arch | shape | compute | memory | collective | dominant | "
+        "useful/HLO | roofline frac |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCHS:
+        for shape in ORDER:
+            r = recs.get((arch, shape, mesh))
+            if r is None:
+                continue
+            if r["status"] == "skipped":
+                lines.append(f"| {arch} | {shape} | — | — | — | "
+                             f"SKIP (sub-quadratic rule) | — | — |")
+                continue
+            if r["status"] != "ok":
+                lines.append(f"| {arch} | {shape} | ERROR | | | | | |")
+                continue
+            tc = r["roofline_compute_s"]
+            tm = r["roofline_memory_s"]
+            tl = r["roofline_collective_s"]
+            dom = r["dominant"].replace("_s", "")
+            bound = max(tc, tm, tl)
+            # roofline fraction: useful model FLOP time / achievable step
+            # time if perfectly overlapped (= max of the three terms)
+            model_t = r["model_flops_per_device"] / 197e12
+            frac = model_t / bound if bound else 0.0
+            ratio = r.get("useful_flops_ratio")
+            lines.append(
+                f"| {arch} | {shape} | {fmt_s(tc)} | {fmt_s(tm)} | "
+                f"{fmt_s(tl)} | {dom} | "
+                f"{ratio:.2f} | {frac*100:.1f}% |")
+    return lines
+
+
+def dryrun_table(recs: Dict, mesh: str) -> List[str]:
+    lines = [
+        "| arch | shape | status | lower+compile | HLO GFLOPs/dev | "
+        "HBM GB/dev | wire GB/dev | collectives (AR/AG/RS/A2A/CP) |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCHS:
+        for shape in ORDER:
+            r = recs.get((arch, shape, mesh))
+            if r is None:
+                continue
+            if r["status"] == "skipped":
+                lines.append(f"| {arch} | {shape} | SKIP | | | | | |")
+                continue
+            if r["status"] != "ok":
+                lines.append(f"| {arch} | {shape} | ERROR | | | | | |")
+                continue
+            c = r["collectives"]["counts"]
+            cs = "/".join(str(int(c.get(k, 0))) for k in
+                          ("all-reduce", "all-gather", "reduce-scatter",
+                           "all-to-all", "collective-permute"))
+            lines.append(
+                f"| {arch} | {shape} | ok | "
+                f"{r['lower_s']:.0f}+{r['compile_s']:.0f}s | "
+                f"{r['flops_per_device']/1e9:.0f} | "
+                f"{r['bytes_per_device']/1e9:.1f} | "
+                f"{r['collectives']['total_wire_bytes']/1e9:.2f} | {cs} |")
+    return lines
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    args = ap.parse_args()
+    recs = load(args.dir)
+    for mesh in ["16x16", "2x16x16"]:
+        n_ok = sum(1 for k, v in recs.items()
+                   if k[2] == mesh and v["status"] == "ok")
+        n_skip = sum(1 for k, v in recs.items()
+                     if k[2] == mesh and v["status"] == "skipped")
+        n_err = sum(1 for k, v in recs.items()
+                    if k[2] == mesh and v["status"] == "error")
+        print(f"\n## mesh {mesh}: {n_ok} ok / {n_skip} skipped / "
+              f"{n_err} error\n")
+        print("\n".join(dryrun_table(recs, mesh)))
+        print()
+        print("\n".join(roofline_table(recs, mesh)))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,117 @@
+"""End-to-end trainer: data pipeline -> sharded train step -> checkpoints,
+with straggler monitoring and preemption-safe emergency saves.
+
+CPU-scale run (the repo's example driver; same code path scales to the
+production mesh by passing --mesh):
+
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-360m --smoke \\
+      --steps 200 --batch 8 --seq 64 --ckpt-dir /tmp/ckpt
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ckpt.checkpointer import CheckpointManager
+from repro.configs import get_config
+from repro.data.pipeline import DataConfig, Prefetcher, SyntheticTokens
+from repro.fault.monitor import EmergencySaver, StragglerMonitor
+from repro.launch.mesh import make_host_mesh
+from repro.models.api import model_fns
+from repro.parallel import sharding as shd
+from repro.train.optim import AdamW, cosine_schedule
+from repro.train.step import TrainState, init_train_state, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    fns = model_fns(cfg)
+    mesh = make_host_mesh()
+    print(f"[train] {cfg.arch_id} ({'smoke' if args.smoke else 'full'}) "
+          f"mesh={dict(mesh.shape)}")
+
+    params = fns.init(jax.random.PRNGKey(0), cfg)
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"[train] {n_params/1e6:.2f}M params")
+
+    opt = AdamW(lr=cosine_schedule(args.lr, warmup=20, total=args.steps))
+    state = init_train_state(params, opt)
+    step_fn = jax.jit(make_train_step(
+        lambda p, b: fns.loss(p, cfg, b), opt,
+        n_microbatches=args.microbatches))
+
+    mgr = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+    start = 0
+    if mgr and args.resume:
+        restored, step = mgr.restore_latest(state)
+        if restored is not None:
+            state, start = restored, step
+            print(f"[train] resumed from step {step}")
+
+    saver = None
+    if mgr:
+        saver = EmergencySaver(
+            lambda: (mgr.wait(), mgr.save(state, int(state.opt.step)))
+        ).install()
+
+    data_cfg = DataConfig(global_batch=args.batch, seq_len=args.seq,
+                          vocab=cfg.vocab,
+                          frames=cfg.family == "encdec",
+                          d_model=cfg.d_model,
+                          positions3d=cfg.family == "vlm")
+    pf = Prefetcher(SyntheticTokens(data_cfg), start_step=start)
+    monitor = StragglerMonitor()
+
+    try:
+        t_last = time.time()
+        for step in range(start, args.steps):
+            batch = {k: jnp.asarray(v) for k, v in pf.next().items()}
+            state, metrics = step_fn(state, batch)
+            dt = time.time() - t_last
+            t_last = time.time()
+            if monitor.observe(step, dt):
+                print(f"[fault] persistent straggling at step {step} "
+                      f"(ema {monitor.stats.ema:.3f}s) — checkpointing")
+                if mgr:
+                    mgr.save(state, step, async_=True)
+                monitor.consecutive = 0
+            if step % args.log_every == 0:
+                print(f"step {step:5d} loss {float(metrics['loss']):.4f} "
+                      f"gnorm {float(metrics['grad_norm']):.3f} "
+                      f"dt {dt*1e3:.0f}ms")
+            if mgr and step and step % args.ckpt_every == 0:
+                mgr.save(state, step, async_=True)
+        if mgr:
+            mgr.wait()
+            mgr.save(state, args.steps)
+            print(f"[train] final checkpoint at {args.steps}")
+    finally:
+        pf.close()
+        if saver:
+            saver.uninstall()
+    print(f"[train] done: final loss {float(metrics['loss']):.4f}")
+    return float(metrics["loss"])
+
+
+if __name__ == "__main__":
+    main()

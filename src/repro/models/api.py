@@ -1,0 +1,68 @@
+"""Uniform model API: family registry dispatching init / loss / serve fns.
+
+Every architecture exposes:
+  init(key, cfg) -> params
+  loss(params, cfg, batch) -> scalar                 (train objective)
+  init_cache(cfg, batch, max_seq, **kw) -> cache     (serve state)
+  prefill(params, cfg, cache, ...) -> (logits, cache)
+  decode_step(params, cfg, cache, tokens) -> (logits, cache)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict
+
+from repro.models import encdec, hybrid, lm, ssm_lm
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelFns:
+    init: Callable
+    loss: Callable
+    forward: Callable
+    init_cache: Callable
+    prefill: Callable
+    decode_step: Callable
+
+
+_TRANSFORMER = ModelFns(
+    init=lm.init_lm, loss=lm.loss_lm, forward=lm.forward_lm,
+    init_cache=lambda cfg, batch, max_seq, **kw: lm.init_cache(
+        cfg, batch, max_seq),
+    prefill=lm.prefill, decode_step=lm.decode_step)
+
+_SSM = ModelFns(
+    init=ssm_lm.init_ssm_lm, loss=ssm_lm.loss_ssm_lm,
+    forward=ssm_lm.forward_ssm_lm,
+    init_cache=lambda cfg, batch, max_seq, **kw: ssm_lm.init_cache_ssm(
+        cfg, batch, max_seq),
+    prefill=ssm_lm.prefill_ssm, decode_step=ssm_lm.decode_step_ssm)
+
+_HYBRID = ModelFns(
+    init=hybrid.init_hybrid, loss=hybrid.loss_hybrid,
+    forward=hybrid.forward_hybrid,
+    init_cache=lambda cfg, batch, max_seq, **kw: hybrid.init_cache_hybrid(
+        cfg, batch, max_seq),
+    prefill=hybrid.prefill_hybrid, decode_step=hybrid.decode_step_hybrid)
+
+_ENCDEC = ModelFns(
+    init=encdec.init_encdec, loss=encdec.loss_encdec,
+    forward=None,
+    init_cache=lambda cfg, batch, max_seq, **kw: encdec.init_cache_encdec(
+        cfg, batch, max_seq, kw.get("enc_len", max_seq)),
+    prefill=encdec.prefill_encdec, decode_step=encdec.decode_step_encdec)
+
+FAMILIES: Dict[str, ModelFns] = {
+    "dense": _TRANSFORMER,
+    "moe": _TRANSFORMER,
+    "vlm": _TRANSFORMER,
+    "ssm": _SSM,
+    "hybrid": _HYBRID,
+    "encdec": _ENCDEC,
+}
+
+
+def model_fns(cfg: ModelConfig) -> ModelFns:
+    return FAMILIES[cfg.family]

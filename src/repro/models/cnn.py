@@ -1,0 +1,51 @@
+"""CNN image model — the paper's own operator class, used by the
+reproduction examples/benchmarks (ResNet-style stack of stride-1 SAME convs
+with optional pooling), built on the framework's conv ops so the
+paper's distributed algorithms and Pallas kernel both apply."""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.kernels.ops import conv2d_same
+from repro.models.layers import _init
+
+
+def init_cnn(key, *, channels: List[int], n_classes: int, in_channels: int = 3,
+             k: int = 3, dtype=jnp.float32) -> Dict:
+    keys = jax.random.split(key, len(channels) + 1)
+    convs = []
+    cin = in_channels
+    for i, cout in enumerate(channels):
+        convs.append({
+            "w": _init(keys[i], (cout, cin, k, k),
+                       scale=(cin * k * k) ** -0.5, dtype=dtype),
+            "b": jnp.zeros((cout,), dtype),
+        })
+        cin = cout
+    return {"convs": convs,
+            "head": _init(keys[-1], (cin, n_classes), dtype=dtype)}
+
+
+def forward_cnn(params: Dict, x: jax.Array, *, pool_every: int = 2,
+                use_pallas: bool = False) -> jax.Array:
+    """x: [N, C, H, W] -> logits [N, n_classes]."""
+    for i, blk in enumerate(params["convs"]):
+        x = conv2d_same(x, blk["w"], use_pallas=use_pallas)
+        x = jax.nn.relu(x + blk["b"][None, :, None, None])
+        if (i + 1) % pool_every == 0:
+            x = lax.reduce_window(x, -jnp.inf, lax.max, (1, 1, 2, 2),
+                                  (1, 1, 2, 2), "VALID")
+    x = jnp.mean(x, axis=(2, 3))
+    return x @ params["head"]
+
+
+def loss_cnn(params: Dict, batch: Dict, **kw) -> jax.Array:
+    logits = forward_cnn(params, batch["images"], **kw)
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32))
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], 1))

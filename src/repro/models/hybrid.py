@@ -1,0 +1,246 @@
+"""Zamba2-style hybrid LM (family "hybrid"): a Mamba2 backbone with one
+SHARED attention+MLP block applied every ``cfg.attn_every`` layers.
+
+The shared block's weights are closure-captured (not scanned), so the scan
+body applies it under ``lax.cond`` at flagged depths — weight reuse exactly
+as in the paper's architecture.  Decode keeps one KV cache slot per
+application point ([n_apps, B, Smax, G, hd]) plus the per-layer Mamba2
+conv/SSD states.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers as L
+from repro.models import ssm
+from repro.models.config import ModelConfig
+
+
+def _n_apps(cfg: ModelConfig) -> int:
+    return cfg.n_layers // cfg.attn_every if cfg.attn_every else 0
+
+
+def init_hybrid(key, cfg: ModelConfig) -> Dict:
+    ke, km, ka, kmlp = jax.random.split(key, 4)
+    mblocks = jax.vmap(lambda k: {
+        "ln": L.init_rmsnorm(cfg.d_model, cfg.jdtype),
+        "mamba": ssm.init_mamba2(k, cfg.d_model, expand=cfg.ssm_expand,
+                                 state=cfg.ssm_state, head_dim=cfg.head_dim,
+                                 dtype=cfg.jdtype),
+    })(jax.random.split(km, cfg.n_layers))
+    shared = {
+        "ln1": L.init_rmsnorm(cfg.d_model, cfg.jdtype),
+        "ln2": L.init_rmsnorm(cfg.d_model, cfg.jdtype),
+        "attn": L.init_attention(ka, cfg.d_model, cfg.n_heads,
+                                 cfg.n_kv_heads, cfg.head_dim, cfg.jdtype),
+        "mlp": L.init_mlp(kmlp, cfg.d_model, cfg.d_ff, cfg.mlp_act,
+                          cfg.jdtype),
+    }
+    return {
+        "emb": L.init_embeddings(ke, cfg.vocab, cfg.d_model, cfg.jdtype),
+        "mblocks": mblocks,
+        "shared": shared,
+        "ln_f": L.init_rmsnorm(cfg.d_model, cfg.jdtype),
+    }
+
+
+def _shared_block(shared: Dict, h: jax.Array, cfg: ModelConfig,
+                  positions: jax.Array) -> jax.Array:
+    a = L.attention(shared["attn"], L.rmsnorm(h, shared["ln1"], cfg.norm_eps),
+                    n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+                    head_dim=cfg.head_dim, positions=positions,
+                    theta=cfg.rope_theta, causal=True, window=0)
+    h = h + a
+    m = L.mlp(shared["mlp"], L.rmsnorm(h, shared["ln2"], cfg.norm_eps),
+              cfg.mlp_act)
+    return h + m
+
+
+def forward_hybrid(params: Dict, cfg: ModelConfig, tokens: jax.Array,
+                   positions=None, vision_embeds=None) -> jax.Array:
+    b, s = tokens.shape
+    h = L.embed(params["emb"], tokens)
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    flags = _attn_flags(cfg)
+
+    def body(carry, xs):
+        hh = carry
+        blk, flag = xs
+        y, _ = ssm.mamba2_block(blk["mamba"],
+                                L.rmsnorm(hh, blk["ln"], cfg.norm_eps),
+                                expand=cfg.ssm_expand, state=cfg.ssm_state,
+                                head_dim=cfg.head_dim, chunk=cfg.ssm_chunk)
+        hh = hh + y
+        hh = lax.cond(flag,
+                      lambda x: _shared_block(params["shared"], x, cfg,
+                                              positions),
+                      lambda x: x, hh)
+        # NOTE: sequence-sharding the residual (llama §Perf it.5) was tried
+        # here and REFUTED: SSD/conv blocks consume the full local sequence,
+        # so the constraint adds a per-layer gather (mem 33.8->63.9s).
+        return hh, None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    h, _ = lax.scan(body_fn, h, (params["mblocks"], flags))
+    return L.rmsnorm(h, params["ln_f"], cfg.norm_eps)
+
+
+def _attn_flags(cfg: ModelConfig) -> jax.Array:
+    idx = jnp.arange(cfg.n_layers)
+    if cfg.attn_every:
+        return (idx % cfg.attn_every) == cfg.attn_every - 1
+    return jnp.zeros((cfg.n_layers,), bool)
+
+
+def loss_hybrid(params: Dict, cfg: ModelConfig, batch: Dict) -> jax.Array:
+    h = forward_hybrid(params, cfg, batch["tokens"])
+    return L.chunked_cross_entropy(h, params["emb"]["lm_head"],
+                                   batch["labels"])
+
+
+# ---------------------------------------------------------------- serve ---
+
+def init_cache_hybrid(cfg: ModelConfig, batch: int, max_seq: int) -> Dict:
+    di = cfg.ssm_expand * cfg.d_model
+    nh = di // cfg.head_dim
+    napp = _n_apps(cfg)
+    return {
+        "conv_x": jnp.zeros((cfg.n_layers, batch, 3, di), cfg.jdtype),
+        "conv_B": jnp.zeros((cfg.n_layers, batch, 3, cfg.ssm_state),
+                            cfg.jdtype),
+        "conv_C": jnp.zeros((cfg.n_layers, batch, 3, cfg.ssm_state),
+                            cfg.jdtype),
+        "ssd": jnp.zeros((cfg.n_layers, batch, nh, cfg.ssm_state,
+                          cfg.head_dim), jnp.float32),
+        "k": jnp.zeros((napp, batch, max_seq, cfg.n_kv_heads, cfg.head_dim),
+                       cfg.jdtype),
+        "v": jnp.zeros((napp, batch, max_seq, cfg.n_kv_heads, cfg.head_dim),
+                       cfg.jdtype),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def _shared_block_cached(shared: Dict, h: jax.Array, ck, cv, *,
+                         cfg: ModelConfig, pos) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    b = h.shape[0]
+    hd, nh, g = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    x = L.rmsnorm(h, shared["ln1"], cfg.norm_eps)
+    q = (x @ shared["attn"]["wq"]).reshape(b, 1, nh, hd)
+    k = (x @ shared["attn"]["wk"]).reshape(b, 1, g, hd)
+    v = (x @ shared["attn"]["wv"]).reshape(b, 1, g, hd)
+    posb = jnp.broadcast_to(pos[None], (b,))[:, None].astype(jnp.int32)
+    q = L.apply_rope(q, posb, cfg.rope_theta)
+    k = L.apply_rope(k, posb, cfg.rope_theta)
+    ck = lax.dynamic_update_slice(ck, k, (0, pos, 0, 0))
+    cv = lax.dynamic_update_slice(cv, v, (0, pos, 0, 0))
+    kk = L._repeat_kv(ck, nh // g)
+    vv = L._repeat_kv(cv, nh // g)
+    valid = jnp.arange(ck.shape[1]) <= pos
+    o = L.attention_scores(q, kk, vv, mask=valid[None, None, None, :],
+                           scale=hd ** -0.5)
+    h = h + o.reshape(b, 1, nh * hd) @ shared["attn"]["wo"]
+    m = L.mlp(shared["mlp"], L.rmsnorm(h, shared["ln2"], cfg.norm_eps),
+              cfg.mlp_act)
+    return h + m, ck, cv
+
+
+def decode_step_hybrid(params: Dict, cfg: ModelConfig, cache: Dict,
+                       tokens: jax.Array) -> Tuple[jax.Array, Dict]:
+    b = tokens.shape[0]
+    h = L.embed(params["emb"], tokens)
+    pos = cache["len"]
+    flags = _attn_flags(cfg)
+    app_idx = jnp.cumsum(flags.astype(jnp.int32)) - 1   # index per layer
+
+    def body(carry, xs):
+        hh, kbuf, vbuf = carry
+        blk, flag, aidx, st_in = xs
+        y, st = ssm.mamba2_block(blk["mamba"],
+                                 L.rmsnorm(hh, blk["ln"], cfg.norm_eps),
+                                 expand=cfg.ssm_expand, state=cfg.ssm_state,
+                                 head_dim=cfg.head_dim, chunk=cfg.ssm_chunk,
+                                 ssm_state=st_in, decode=True)
+        hh = hh + y
+
+        def with_attn(args):
+            hh, kbuf, vbuf = args
+            ck = kbuf[aidx]
+            cv = vbuf[aidx]
+            hh, ck, cv = _shared_block_cached(params["shared"], hh, ck, cv,
+                                              cfg=cfg, pos=pos)
+            kbuf = kbuf.at[aidx].set(ck)
+            vbuf = vbuf.at[aidx].set(cv)
+            return hh, kbuf, vbuf
+
+        hh, kbuf, vbuf = lax.cond(flag, with_attn, lambda a: a,
+                                  (hh, kbuf, vbuf))
+        return (hh, kbuf, vbuf), st
+
+    mamba_states = {k: cache[k] for k in ("conv_x", "conv_B", "conv_C",
+                                          "ssd")}
+    (h, kbuf, vbuf), sts = lax.scan(
+        body, (h, cache["k"], cache["v"]),
+        (params["mblocks"], flags, app_idx, mamba_states))
+    h = L.rmsnorm(h, params["ln_f"], cfg.norm_eps)
+    logits = (h @ params["emb"]["lm_head"]).astype(jnp.float32)
+    return logits, {**sts, "k": kbuf, "v": vbuf, "len": pos + 1}
+
+
+def prefill_hybrid(params: Dict, cfg: ModelConfig, cache: Dict,
+                   tokens: jax.Array) -> Tuple[jax.Array, Dict]:
+    """Prefill via full forward + bulk cache write for attention layers."""
+    b, s = tokens.shape
+    h = L.embed(params["emb"], tokens)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    flags = _attn_flags(cfg)
+    app_idx = jnp.cumsum(flags.astype(jnp.int32)) - 1
+
+    def body(carry, xs):
+        hh, kbuf, vbuf = carry
+        blk, flag, aidx, st_in = xs
+        y, st = ssm.mamba2_block(blk["mamba"],
+                                 L.rmsnorm(hh, blk["ln"], cfg.norm_eps),
+                                 expand=cfg.ssm_expand, state=cfg.ssm_state,
+                                 head_dim=cfg.head_dim, chunk=cfg.ssm_chunk,
+                                 ssm_state=st_in)
+        hh = hh + y
+
+        def with_attn(args):
+            hh, kbuf, vbuf = args
+            x = L.rmsnorm(hh, params["shared"]["ln1"], cfg.norm_eps)
+            g, hd = cfg.n_kv_heads, cfg.head_dim
+            k = (x @ params["shared"]["attn"]["wk"]).reshape(b, s, g, hd)
+            v = (x @ params["shared"]["attn"]["wv"]).reshape(b, s, g, hd)
+            k = L.apply_rope(k, positions, cfg.rope_theta)
+            kbuf = lax.dynamic_update_slice(
+                kbuf, k[None].astype(kbuf.dtype), (aidx, 0, 0, 0, 0))
+            vbuf = lax.dynamic_update_slice(
+                vbuf, v[None].astype(vbuf.dtype), (aidx, 0, 0, 0, 0))
+            a = L.attention(params["shared"]["attn"], x,
+                            n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+                            head_dim=cfg.head_dim, positions=positions,
+                            theta=cfg.rope_theta, causal=True)
+            hh = hh + a
+            m = L.mlp(params["shared"]["mlp"],
+                      L.rmsnorm(hh, params["shared"]["ln2"], cfg.norm_eps),
+                      cfg.mlp_act)
+            return hh + m, kbuf, vbuf
+
+        hh, kbuf, vbuf = lax.cond(flag, with_attn, lambda a: a,
+                                  (hh, kbuf, vbuf))
+        return (hh, kbuf, vbuf), st
+
+    mamba_states = {k: cache[k] for k in ("conv_x", "conv_B", "conv_C",
+                                          "ssd")}
+    (h, kbuf, vbuf), sts = lax.scan(
+        body, (h, cache["k"], cache["v"]),
+        (params["mblocks"], flags, app_idx, mamba_states))
+    h = L.rmsnorm(h[:, -1:], params["ln_f"], cfg.norm_eps)
+    logits = (h @ params["emb"]["lm_head"]).astype(jnp.float32)
+    return logits, {**sts, "k": kbuf, "v": vbuf, "len": jnp.int32(s)}

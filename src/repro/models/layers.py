@@ -1,0 +1,571 @@
+"""Shared neural layers: norms, RoPE/M-RoPE, GQA attention, MLPs.
+
+Functional style: every layer is (params_pytree, inputs) -> outputs, with an
+``init_*`` companion.  Attention masking supports causal, sliding-window
+(gemma3 local layers), bidirectional (whisper encoder) and cross attention.
+Computations accumulate in f32 where it matters (norms, softmax, logits).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def _init(key, shape, scale=None, dtype=jnp.bfloat16):
+    scale = scale if scale is not None else shape[0] ** -0.5
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# ----------------------------------------------------------------- norms --
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return ((xf * lax.rsqrt(var + eps)) * (1.0 + w.astype(jnp.float32))
+            ).astype(x.dtype)
+
+
+def init_rmsnorm(d: int, dtype=jnp.bfloat16) -> jax.Array:
+    return jnp.zeros((d,), dtype)
+
+
+# ------------------------------------------------------------------ RoPE --
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [B, S, H, D]; positions: [B, S] int32."""
+    freqs = rope_freqs(x.shape[-1], theta)                       # [D/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs    # [B,S,D/2]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin,
+                            x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions: jax.Array, theta: float,
+                sections: Tuple[int, int, int]) -> jax.Array:
+    """Qwen2-VL multimodal RoPE.  positions: [B, 3, S] (t, h, w streams);
+    ``sections`` splits the D/2 frequency slots among the streams."""
+    d2 = x.shape[-1] // 2
+    assert sum(sections) == d2, (sections, d2)
+    freqs = rope_freqs(x.shape[-1], theta)                       # [D/2]
+    # angle slot i uses position stream chosen by its section
+    stream = jnp.repeat(jnp.arange(3), jnp.array(sections),
+                        total_repeat_length=d2)                  # [D/2]
+    pos = jnp.take_along_axis(
+        positions.astype(jnp.float32),
+        stream[None, :, None].repeat(positions.shape[0], 0).astype(jnp.int32),
+        axis=1)                                                  # [B,D/2,S]
+    angles = pos.transpose(0, 2, 1) * freqs                      # [B,S,D/2]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin,
+                            x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+# ------------------------------------------------------------- attention --
+
+def init_attention(key, d_model: int, n_heads: int, n_kv_heads: int,
+                   head_dim: int, dtype=jnp.bfloat16) -> Dict:
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": _init(ks[0], (d_model, n_heads * head_dim), dtype=dtype),
+        "wk": _init(ks[1], (d_model, n_kv_heads * head_dim), dtype=dtype),
+        "wv": _init(ks[2], (d_model, n_kv_heads * head_dim), dtype=dtype),
+        "wo": _init(ks[3], (n_heads * head_dim, d_model), dtype=dtype),
+    }
+
+
+def _repeat_kv(x: jax.Array, n_rep: int) -> jax.Array:
+    if n_rep == 1:
+        return x
+    b, s, g, d = x.shape
+    return jnp.broadcast_to(x[:, :, :, None, :], (b, s, g, n_rep, d)
+                            ).reshape(b, s, g * n_rep, d)
+
+
+def attention_scores(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                     mask: Optional[jax.Array], scale: float) -> jax.Array:
+    """q:[B,Sq,H,D] k,v:[B,Sk,H,D] -> [B,Sq,H,D]; softmax in f32."""
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if mask is not None:
+        logits = jnp.where(mask, logits, jnp.finfo(jnp.float32).min)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), v)
+    return out
+
+
+# Blockwise (flash-style) attention: online-softmax over key blocks so the
+# S x S logits are never materialized — O(Sq*Kc) live memory instead of
+# O(Sq*Sk).  Dense path is used below this sequence-area threshold.
+_BLOCKWISE_AREA = 2048 * 2048
+_NEG = -1e30
+
+
+def blockwise_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool, window=0, scale: float,
+                        q_chunk: int = 512, k_chunk: int = 1024
+                        ) -> jax.Array:
+    """q:[B,Sq,H,D] k,v:[B,Sk,H,D] (H already GQA-expanded).
+
+    Buffers stay in the input dtype (f32 only inside the MXU accumulation
+    and the online-softmax stats); each q-chunk body is rematerialized
+    (``jax.checkpoint``) so the backward pass recomputes the S x S logits
+    flash-attention style instead of saving them as residuals — without
+    this, one layer's VJP writes the full logits+mask (tens of GB) to HBM.
+    """
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    q_chunk = min(q_chunk, sq)
+    k_chunk = min(k_chunk, sk)
+    assert sq % q_chunk == 0 and sk % k_chunk == 0
+    nq, nk = sq // q_chunk, sk // k_chunk
+    qb = q.reshape(b, nq, q_chunk, h, d).transpose(1, 0, 3, 2, 4)
+    kb = k.reshape(b, nk, k_chunk, h, d).transpose(1, 0, 3, 2, 4)
+    vb = v.reshape(b, nk, k_chunk, h, d).transpose(1, 0, 3, 2, 4)
+    win = jnp.asarray(window, jnp.int32)
+
+    @functools.partial(jax.checkpoint, static_argnums=())
+    def per_q(qi, q_blk):
+        qpos = qi * q_chunk + jnp.arange(q_chunk)
+
+        def inner(carry, xs):
+            m, l, acc = carry
+            kj, k_blk, v_blk = xs
+            logits = jnp.einsum("bhqd,bhkd->bhqk", q_blk, k_blk,
+                                preferred_element_type=jnp.float32) * scale
+            kpos = kj * k_chunk + jnp.arange(k_chunk)
+            msk = jnp.ones((q_chunk, k_chunk), bool)
+            if causal:
+                msk &= kpos[None, :] <= qpos[:, None]
+            msk &= jnp.where(win > 0, kpos[None, :] > qpos[:, None] - win,
+                             True)
+            logits = jnp.where(msk[None, None], logits, _NEG)
+            m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+            corr = jnp.exp(m - m_new)
+            p = jnp.exp(logits - m_new[..., None])
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] \
+                + jnp.einsum("bhqk,bhkd->bhqd",
+                             p.astype(v_blk.dtype), v_blk,
+                             preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        init = (jnp.full((b, h, q_chunk), _NEG, jnp.float32),
+                jnp.zeros((b, h, q_chunk), jnp.float32),
+                jnp.zeros((b, h, q_chunk, d), jnp.float32))
+        (m, l, acc), _ = lax.scan(
+            inner, init, (jnp.arange(nk), kb, vb))
+        return acc / jnp.maximum(l, 1e-30)[..., None]   # [B,H,Q,D]
+
+    out = lax.map(lambda xs: per_q(*xs), (jnp.arange(nq), qb))
+    out = out.transpose(1, 0, 3, 2, 4).reshape(b, sq, h, d)
+    return out.astype(v.dtype)
+
+
+# --------------------------------------------------------------------------
+# Flash attention with a custom VJP: residuals are (q, k, v, out, lse) —
+# O(S*D) — and the backward recomputes P per (q, k) block pair.  Without
+# this, the VJP of the blockwise scan stacks per-block logits ([nk, B, H,
+# Q, Kc] f32) as residuals: tens of GB of HBM traffic per layer.
+# --------------------------------------------------------------------------
+
+def _flash_fwd_blocks(q6, k5, v5, win, *, causal, scale, q_chunk, k_chunk):
+    """q6: [nq,B,G,R,Q,D]; k5,v5: [nk,B,G,Kc,D] (grouped GQA — the kv-head
+    dim is NEVER expanded to H, so GSPMD keeps k/v at their natural
+    sharding instead of replicating a broadcast).  Returns (out6, lse6)."""
+    nq, b, g, r, qc, d = q6.shape
+    nk = k5.shape[0]
+
+    def per_q(xs):
+        qi, q_blk = xs
+        qpos = qi * q_chunk + jnp.arange(q_chunk)
+
+        def inner(carry, xs2):
+            m, l, acc = carry
+            kj, k_blk, v_blk = xs2
+            s = jnp.einsum("bgrqd,bgkd->bgrqk", q_blk, k_blk,
+                           preferred_element_type=jnp.float32) * scale
+            kpos = kj * k_chunk + jnp.arange(k_chunk)
+            msk = jnp.ones((q_chunk, k_chunk), bool)
+            if causal:
+                msk &= kpos[None, :] <= qpos[:, None]
+            msk &= jnp.where(win > 0, kpos[None, :] > qpos[:, None] - win,
+                             True)
+            s = jnp.where(msk[None, None, None], s, _NEG)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            corr = jnp.exp(m - m_new)
+            # p is bounded in [0,1]: bf16 is plenty, and halving the one
+            # tensor that crosses the dot->exp->dot fusion boundaries
+            # halves the attention streaming traffic.
+            p = jnp.exp(s - m_new[..., None]).astype(v_blk.dtype)
+            l_new = l * corr + jnp.sum(p, axis=-1, dtype=jnp.float32)
+            acc_new = acc * corr[..., None] \
+                + jnp.einsum("bgrqk,bgkd->bgrqd", p, v_blk,
+                             preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        init = (jnp.full((b, g, r, q_chunk), _NEG, jnp.float32),
+                jnp.zeros((b, g, r, q_chunk), jnp.float32),
+                jnp.zeros((b, g, r, q_chunk, d), jnp.float32))
+        (m, l, acc), _ = lax.scan(inner, init, (jnp.arange(nk), k5, v5))
+        l = jnp.maximum(l, 1e-30)
+        return acc / l[..., None], m + jnp.log(l)
+
+    return lax.map(per_q, (jnp.arange(nq), q6))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7))
+def flash_attention(q, k, v, window, causal: bool, scale: float,
+                    q_chunk: int, k_chunk: int):
+    """q:[B,Sq,H,D]; k,v:[B,Sk,G,D] with G | H (grouped GQA, unexpanded);
+    window: traced int32 (0 = global)."""
+    out, _ = _flash_fwd(q, k, v, window, causal, scale, q_chunk, k_chunk)
+    return out
+
+
+def _split_q6(q, n, c, g):
+    b, s, h, d = q.shape
+    return q.reshape(b, n, c, g, h // g, d).transpose(1, 0, 3, 4, 2, 5)
+
+
+def _merge_q6(x6):
+    n, b, g, r, c, d = x6.shape
+    return x6.transpose(1, 0, 4, 2, 3, 5).reshape(b, n * c, g * r, d)
+
+
+def _split5(x, n, c):
+    b, s, h, d = x.shape
+    return x.reshape(b, n, c, h, d).transpose(1, 0, 3, 2, 4)
+
+
+def _merge5(x5):
+    n, b, h, c, d = x5.shape
+    return x5.transpose(1, 0, 3, 2, 4).reshape(b, n * c, h, d)
+
+
+def _flash_fwd(q, k, v, window, causal, scale, q_chunk, k_chunk):
+    from jax.ad_checkpoint import checkpoint_name
+    b, sq, h, d = q.shape
+    sk, g = k.shape[1], k.shape[2]
+    nq, nk = sq // q_chunk, sk // k_chunk
+    q6 = _split_q6(q, nq, q_chunk, g)
+    k5 = _split5(k, nk, k_chunk)
+    v5 = _split5(v, nk, k_chunk)
+    out6, lse6 = _flash_fwd_blocks(q6, k5, v5, window, causal=causal,
+                                   scale=scale, q_chunk=q_chunk,
+                                   k_chunk=k_chunk)
+    out = _merge_q6(out6.astype(v.dtype))
+    # taggable for remat policies: saving (out, lse) lets a layer-level
+    # jax.checkpoint skip re-running the streaming forward in the backward
+    out = checkpoint_name(out, "flash_out")
+    lse6 = checkpoint_name(lse6, "flash_lse")
+    return out, (q, k, v, out, lse6, window)
+
+
+def _flash_bwd(causal, scale, q_chunk, k_chunk, res, gr):
+    q, k, v, out, lse6, win = res
+    b, sq, h, d = q.shape
+    sk, g = k.shape[1], k.shape[2]
+    nq, nk = sq // q_chunk, sk // k_chunk
+    q6 = _split_q6(q, nq, q_chunk, g)
+    k5 = _split5(k, nk, k_chunk)
+    v5 = _split5(v, nk, k_chunk)
+    g6 = _split_q6(gr, nq, q_chunk, g)
+    out6 = _split_q6(out, nq, q_chunk, g)
+    delta6 = jnp.sum(g6.astype(jnp.float32) * out6.astype(jnp.float32),
+                     axis=-1)                        # [nq,B,G,R,Q]
+
+    def per_q(carry, xs):
+        dk_acc, dv_acc = carry                       # [nk,B,G,Kc,D] f32
+        qi, q_blk, g_blk, lse_blk, delta_blk = xs
+        qpos = qi * q_chunk + jnp.arange(q_chunk)
+
+        def body(kj, carry2):
+            dq_blk, dk_acc, dv_acc = carry2
+            k_blk = k5[kj]
+            v_blk = v5[kj]
+            s = jnp.einsum("bgrqd,bgkd->bgrqk", q_blk, k_blk,
+                           preferred_element_type=jnp.float32) * scale
+            kpos = kj * k_chunk + jnp.arange(k_chunk)
+            msk = jnp.ones((q_chunk, k_chunk), bool)
+            if causal:
+                msk &= kpos[None, :] <= qpos[:, None]
+            msk &= jnp.where(win > 0, kpos[None, :] > qpos[:, None] - win,
+                             True)
+            s = jnp.where(msk[None, None, None], s, _NEG)
+            p = jnp.exp(s - lse_blk[..., None]) \
+                .astype(v_blk.dtype)                 # [B,G,R,Q,Kc] bf16
+            dv_j = jnp.einsum("bgrqk,bgrqd->bgkd", p, g_blk,
+                              preferred_element_type=jnp.float32)
+            dp = jnp.einsum("bgrqd,bgkd->bgrqk", g_blk, v_blk,
+                            preferred_element_type=jnp.float32)
+            ds = (p.astype(jnp.float32) * (dp - delta_blk[..., None])
+                  * scale).astype(v_blk.dtype)
+            dq_blk = dq_blk + jnp.einsum("bgrqk,bgkd->bgrqd", ds, k_blk,
+                                         preferred_element_type=jnp.float32)
+            dk_j = jnp.einsum("bgrqk,bgrqd->bgkd", ds, q_blk,
+                              preferred_element_type=jnp.float32)
+            dk_acc = dk_acc.at[kj].add(dk_j)
+            dv_acc = dv_acc.at[kj].add(dv_j)
+            return dq_blk, dk_acc, dv_acc
+
+        dq0 = jnp.zeros((b, g, h // g, q_chunk, d), jnp.float32)
+        dq_blk, dk_acc, dv_acc = lax.fori_loop(
+            0, nk, body, (dq0, dk_acc, dv_acc))
+        return (dk_acc, dv_acc), dq_blk
+
+    dkv0 = (jnp.zeros((nk, b, g, k_chunk, d), jnp.float32),
+            jnp.zeros((nk, b, g, k_chunk, d), jnp.float32))
+    (dk5, dv5), dq6 = lax.scan(
+        per_q, dkv0, (jnp.arange(nq), q6, g6, lse6, delta6))
+    dq = _merge_q6(dq6).astype(q.dtype)
+    dk = _merge5(dk5).astype(k.dtype)
+    dv = _merge5(dv5).astype(v.dtype)
+    return dq, dk, dv, None
+
+
+def _flash_fwd_rule(q, k, v, window, causal, scale, q_chunk, k_chunk):
+    out, res = _flash_fwd(q, k, v, window, causal, scale, q_chunk, k_chunk)
+    return out, res
+
+
+flash_attention.defvjp(_flash_fwd_rule, _flash_bwd)
+
+
+# Optional attention-internal sharding pins (set by the launcher before
+# tracing; no-op otherwise).  GSPMD's propagation through the GQA repeat
+# (a [B,S,G,1,D] broadcast) is poor — it falls back to full replication of
+# the expanded k/v ("Involuntary full rematerialization"), which turns
+# every attention call into tens-of-GB all-gathers.  Pinning the expanded
+# tensors to a head-sharded layout makes the expansion a local broadcast
+# (k/v are replicated over the model axis after their row-parallel psum).
+_ATTN_MESH = {"mesh": None, "dp": ()}
+
+
+def set_attention_mesh(mesh, dp_axes=("pod", "data")):
+    _ATTN_MESH["mesh"] = mesh
+    _ATTN_MESH["dp"] = tuple(a for a in dp_axes
+                             if mesh is not None and a in mesh.shape
+                             and mesh.shape[a] > 1)
+
+
+def _model_free() -> bool:
+    """True when the model axis is NOT already carrying batch (pure-DP
+    regimes fold it into dp)."""
+    return "model" not in _ATTN_MESH["dp"]
+
+
+def _shard_heads(x: jax.Array, batch_sharded: bool = True) -> jax.Array:
+    """Constrain [B, S, H, D] to (dp, None, model, None) when divisible."""
+    mesh = _ATTN_MESH["mesh"]
+    if mesh is None:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    m = mesh.shape.get("model", 1)
+    h_spec = "model" if (m > 1 and x.shape[2] % m == 0
+                         and _model_free()) else None
+    dp = _ATTN_MESH["dp"]
+    b_spec = (dp if len(dp) > 1 else dp[0]) \
+        if (dp and batch_sharded and x.shape[0] % _dp_size(mesh) == 0) \
+        else None
+    spec = P(b_spec, None, h_spec, None)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def _dp_size(mesh) -> int:
+    return math.prod(mesh.shape[a] for a in _ATTN_MESH["dp"]) \
+        if _ATTN_MESH["dp"] else 1
+
+
+def replicate_model(x: jax.Array) -> jax.Array:
+    """Pin a tensor to batch-over-data sharding, replicated over the model
+    axis.  Used around tiny sequential recurrences (sLSTM cells) where any
+    model-axis sharding costs a per-timestep psum — thousands of
+    latency-bound collectives per step."""
+    mesh = _ATTN_MESH["mesh"]
+    if mesh is None or x.ndim < 2:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    dp = _ATTN_MESH["dp"]
+    b_spec = (dp if len(dp) > 1 else dp[0]) \
+        if (dp and x.shape[0] % _dp_size(mesh) == 0) else None
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(b_spec, *([None] * (x.ndim - 1)))))
+
+
+def shard_residual(x: jax.Array) -> jax.Array:
+    """Sequence-shard the residual stream [B, S, d] over the model axis
+    (Megatron-SP analogue): per-block psums become reduce-scatters, the
+    remat carry shrinks by the TP degree, and norms run on 1/TP of the
+    tokens.  No-op without a pinned mesh or when S doesn't divide."""
+    mesh = _ATTN_MESH["mesh"]
+    if mesh is None or x.ndim != 3:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    m = mesh.shape.get("model", 1)
+    s_spec = "model" if (m > 1 and x.shape[1] % m == 0
+                         and _model_free()) else None
+    dp = _ATTN_MESH["dp"]
+    b_spec = (dp if len(dp) > 1 else dp[0]) \
+        if (dp and x.shape[0] % _dp_size(mesh) == 0) else None
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(b_spec, s_spec, None)))
+
+
+def attention_core(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                   causal: bool, window=0, scale: float) -> jax.Array:
+    """Dispatch dense vs flash attention on live-memory footprint.
+
+    ``k``/``v`` may have fewer (GQA) heads than ``q``; when the launcher
+    pinned a mesh and the head count divides the model axis, the GQA
+    expansion happens locally under an explicit sharding constraint;
+    otherwise the flash path consumes k/v unexpanded (grouped einsums)."""
+    sq, sk = q.shape[1], k.shape[1]
+    n_rep = q.shape[2] // k.shape[2]
+    if sq * sk > _BLOCKWISE_AREA and sq > 1:
+        q_chunk = 512 if sq % 512 == 0 else math.gcd(sq, 512)
+        k_chunk = 1024 if sk % 1024 == 0 else math.gcd(sk, 1024)
+        mesh = _ATTN_MESH["mesh"]
+        if mesh is not None and q.shape[2] % mesh.shape.get("model", 1) == 0:
+            q = _shard_heads(q)
+            k = _shard_heads(_repeat_kv(k, n_rep))
+            v = _shard_heads(_repeat_kv(v, n_rep))
+        out = flash_attention(q, k, v, jnp.asarray(window, jnp.int32),
+                              causal, scale, q_chunk, k_chunk)
+        return _shard_heads(out)
+    k, v = _repeat_kv(k, n_rep), _repeat_kv(v, n_rep)
+    mask = make_mask(sq, sk, causal=causal, window=window,
+                     offset=sk - sq if causal else 0)
+    return attention_scores(q, k, v, mask=mask, scale=scale)
+
+
+def make_mask(sq: int, sk: int, *, causal: bool, window=0,
+              offset: int = 0) -> Optional[jax.Array]:
+    """[1,1,Sq,Sk] boolean mask.  ``window`` may be a traced int32 scalar
+    (0 = no window — gemma3's per-layer local/global flag).  ``offset`` =
+    absolute position of query 0 minus position of key 0."""
+    is_static_nowin = isinstance(window, int) and window == 0
+    if not causal and is_static_nowin:
+        return None
+    qpos = jnp.arange(sq)[:, None] + offset
+    kpos = jnp.arange(sk)[None, :]
+    m = jnp.ones((sq, sk), bool)
+    if causal:
+        m &= kpos <= qpos
+    if not is_static_nowin:
+        win = jnp.asarray(window, jnp.int32)
+        m &= jnp.where(win > 0, kpos > qpos - win, True)
+    return m[None, None]
+
+
+def attention(params: Dict, x: jax.Array, *, n_heads: int, n_kv_heads: int,
+              head_dim: int, positions: jax.Array, theta: float,
+              causal: bool = True, window: int = 0,
+              mrope_sections: Optional[Tuple[int, int, int]] = None,
+              kv_override: Optional[Tuple[jax.Array, jax.Array]] = None
+              ) -> jax.Array:
+    """Full (training / prefill) attention.  x: [B, S, d]."""
+    b, s, _ = x.shape
+    q = (x @ params["wq"]).reshape(b, s, n_heads, head_dim)
+    if kv_override is None:
+        k = (x @ params["wk"]).reshape(b, s, n_kv_heads, head_dim)
+        v = (x @ params["wv"]).reshape(b, s, n_kv_heads, head_dim)
+        if mrope_sections is not None:
+            q = apply_mrope(q, positions, theta, mrope_sections)
+            k = apply_mrope(k, positions, theta, mrope_sections)
+        else:
+            pos2d = positions if positions.ndim == 2 else positions[:, 0]
+            q = apply_rope(q, pos2d, theta)
+            k = apply_rope(k, pos2d, theta)
+    else:
+        k, v = kv_override  # cross attention (already projected)
+        if mrope_sections is not None:
+            q = apply_mrope(q, positions, theta, mrope_sections)
+        else:
+            pos2d = positions if positions.ndim == 2 else positions[:, 0]
+            q = apply_rope(q, pos2d, theta)
+    out = attention_core(q, k, v, causal=causal, window=window,
+                         scale=head_dim ** -0.5)
+    return out.reshape(b, s, n_heads * head_dim) @ params["wo"]
+
+
+# ------------------------------------------------------------------ MLPs --
+
+def init_mlp(key, d_model: int, d_ff: int, act: str,
+             dtype=jnp.bfloat16) -> Dict:
+    ks = jax.random.split(key, 3)
+    p = {"w_up": _init(ks[0], (d_model, d_ff), dtype=dtype),
+         "w_down": _init(ks[1], (d_ff, d_model), dtype=dtype)}
+    if act in ("swiglu", "geglu"):
+        p["w_gate"] = _init(ks[2], (d_model, d_ff), dtype=dtype)
+    return p
+
+
+def mlp(params: Dict, x: jax.Array, act: str) -> jax.Array:
+    up = x @ params["w_up"]
+    if act == "swiglu":
+        h = jax.nn.silu(x @ params["w_gate"]) * up
+    elif act == "geglu":
+        h = jax.nn.gelu(x @ params["w_gate"]) * up
+    else:
+        h = jax.nn.gelu(up)
+    return h @ params["w_down"]
+
+
+# ------------------------------------------------------------- embedding --
+
+def init_embeddings(key, vocab: int, d_model: int,
+                    dtype=jnp.bfloat16) -> Dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "tok": _init(k1, (vocab, d_model), scale=0.02, dtype=dtype),
+        "lm_head": _init(k2, (d_model, vocab), dtype=dtype),
+    }
+
+
+def embed(emb: Dict, tokens: jax.Array) -> jax.Array:
+    return jnp.take(emb["tok"], tokens, axis=0)
+
+
+def chunked_cross_entropy(h: jax.Array, lm_head: jax.Array,
+                          labels: jax.Array, *, chunk: int = 512
+                          ) -> jax.Array:
+    """Mean token cross-entropy without materializing full [B,S,V] logits.
+
+    Scans over sequence chunks; inside a chunk the V dim may be sharded
+    (GSPMD reduces over it).  h: [B,S,d], labels: [B,S] int32.
+    """
+    b, s, d = h.shape
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    hc = h.reshape(b, s // chunk, chunk, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(b, s // chunk, chunk).transpose(1, 0, 2)
+
+    vocab = lm_head.shape[1]
+
+    def body(acc, xs):
+        hx, lx = xs                      # [B,chunk,d], [B,chunk]
+        logits = (hx @ lm_head).astype(jnp.float32)   # [B,chunk,V]
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        # shard-local masked reduction over the (possibly model-sharded)
+        # vocab dim — no cross-shard gather, just a psum'd sum.
+        sel = jnp.arange(vocab)[None, None, :] == lx[..., None]
+        tgt = jnp.sum(jnp.where(sel, logits, 0.0), axis=-1)
+        return acc + jnp.sum(lse - tgt), None
+
+    total, _ = lax.scan(body, jnp.float32(0.0), (hc, lc))
+    return total / (b * s)

@@ -1,0 +1,256 @@
+"""Decoder-only LM covering the dense / moe / vlm families.
+
+One code path, scan-over-layers (stacked block params, compile-time O(1) in
+depth), per-layer global/local attention flags (gemma3's 5:1 pattern),
+GQA + RoPE / M-RoPE, dense-MLP or MoE feed-forward, chunked vocab loss.
+
+Serving: `init_cache` + `prefill` + `decode_step` with a static-shape ring
+KV cache written via dynamic_update_slice.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers as L
+from repro.models import moe as moe_mod
+from repro.models.config import ModelConfig
+
+
+# ------------------------------------------------------------------ init --
+
+def init_block(key, cfg: ModelConfig) -> Dict:
+    k1, k2 = jax.random.split(key)
+    blk = {
+        "ln1": L.init_rmsnorm(cfg.d_model, cfg.jdtype),
+        "ln2": L.init_rmsnorm(cfg.d_model, cfg.jdtype),
+        "attn": L.init_attention(k1, cfg.d_model, cfg.n_heads,
+                                 cfg.n_kv_heads, cfg.head_dim, cfg.jdtype),
+    }
+    if cfg.is_moe:
+        blk["moe"] = moe_mod.init_moe(k2, cfg.d_model, cfg.d_ff,
+                                      cfg.n_experts, cfg.jdtype)
+    else:
+        blk["mlp"] = L.init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.mlp_act,
+                                cfg.jdtype)
+    return blk
+
+
+def init_lm(key, cfg: ModelConfig) -> Dict:
+    ke, kb = jax.random.split(key)
+    blocks = jax.vmap(lambda k: init_block(k, cfg))(
+        jax.random.split(kb, cfg.n_layers))
+    return {
+        "emb": L.init_embeddings(ke, cfg.vocab, cfg.d_model, cfg.jdtype),
+        "blocks": blocks,
+        "ln_f": L.init_rmsnorm(cfg.d_model, cfg.jdtype),
+    }
+
+
+def layer_windows(cfg: ModelConfig) -> jax.Array:
+    """Per-layer sliding window (0 = global attention)."""
+    idx = jnp.arange(cfg.n_layers)
+    if cfg.attn_pattern_period > 0:
+        is_global = (idx % cfg.attn_pattern_period
+                     == cfg.attn_pattern_period - 1)
+        return jnp.where(is_global, 0, cfg.sliding_window).astype(jnp.int32)
+    return jnp.zeros((cfg.n_layers,), jnp.int32)
+
+
+# --------------------------------------------------------------- forward --
+
+def _block_apply(blk: Dict, h: jax.Array, *, cfg: ModelConfig,
+                 positions: jax.Array, window: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    mrope = cfg.mrope_sections if cfg.mrope_sections[0] else None
+    a = L.attention(blk["attn"], L.rmsnorm(h, blk["ln1"], cfg.norm_eps),
+                    n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+                    head_dim=cfg.head_dim, positions=positions,
+                    theta=cfg.rope_theta, causal=True, window=window,
+                    mrope_sections=mrope)
+    h = h + a
+    aux = jnp.float32(0.0)
+    if cfg.is_moe:
+        m, aux = moe_mod.moe_layer(blk["moe"],
+                                   L.rmsnorm(h, blk["ln2"], cfg.norm_eps),
+                                   top_k=cfg.top_k,
+                                   capacity_factor=cfg.capacity_factor,
+                                   group_size=cfg.moe_group_size)
+    else:
+        m = L.mlp(blk["mlp"], L.rmsnorm(h, blk["ln2"], cfg.norm_eps),
+                  cfg.mlp_act)
+    return h + m, aux
+
+
+def forward_lm(params: Dict, cfg: ModelConfig, tokens: jax.Array,
+               positions: Optional[jax.Array] = None,
+               vision_embeds: Optional[jax.Array] = None) -> jax.Array:
+    """tokens: [B,S] -> hidden [B,S,d] (pre-logits, final-normed)."""
+    b, s = tokens.shape
+    h = L.embed(params["emb"], tokens)
+    if vision_embeds is not None:  # VLM stub frontend: prefix embeddings
+        sv = vision_embeds.shape[1]
+        h = jnp.concatenate([vision_embeds.astype(h.dtype), h[:, sv:]], 1)
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    windows = layer_windows(cfg)
+
+    def body(carry, xs):
+        hh, aux_sum = carry
+        blk, win = xs
+        hh, aux = _block_apply(blk, hh, cfg=cfg, positions=positions,
+                               window=win)
+        return (L.shard_residual(hh), aux_sum + aux), None
+
+    if cfg.remat:
+        policy = jax.checkpoint_policies.save_only_these_names(
+            "flash_out", "flash_lse")
+        body_fn = jax.checkpoint(body, policy=policy)
+    else:
+        body_fn = body
+    (h, aux), _ = lax.scan(body_fn, (h, jnp.float32(0.0)),
+                           (params["blocks"], windows))
+    h = L.rmsnorm(h, params["ln_f"], cfg.norm_eps)
+    forward_lm._last_aux = aux  # benign stash for loss fn reuse
+    return h
+
+
+def loss_lm(params: Dict, cfg: ModelConfig, batch: Dict) -> jax.Array:
+    h = forward_lm(params, cfg, batch["tokens"],
+                   positions=batch.get("positions"),
+                   vision_embeds=batch.get("vision_embeds"))
+    ce = L.chunked_cross_entropy(h, params["emb"]["lm_head"],
+                                 batch["labels"])
+    if cfg.is_moe:
+        # recompute aux cheaply is wrong under remat; use stashed value
+        ce = ce + 0.01 * forward_lm._last_aux / cfg.n_layers
+    return ce
+
+
+# ---------------------------------------------------------------- serve ---
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> Dict:
+    shape = (cfg.n_layers, batch, max_seq, cfg.n_kv_heads, cfg.head_dim)
+    return {
+        "k": jnp.zeros(shape, cfg.jdtype),
+        "v": jnp.zeros(shape, cfg.jdtype),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def _cached_attention(blk: Dict, h: jax.Array, cache_k, cache_v, *,
+                      cfg: ModelConfig, pos: jax.Array,
+                      window: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Single-token attention against the cache.  h: [B,1,d];
+    cache_k/v: [B,Smax,G,hd]; pos: scalar current length."""
+    b = h.shape[0]
+    hd, nh, g = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    x = L.rmsnorm(h, blk["ln1"], cfg.norm_eps)
+    q = (x @ blk["attn"]["wq"]).reshape(b, 1, nh, hd)
+    k = (x @ blk["attn"]["wk"]).reshape(b, 1, g, hd)
+    v = (x @ blk["attn"]["wv"]).reshape(b, 1, g, hd)
+    posb = jnp.broadcast_to(pos[None], (b,))[:, None].astype(jnp.int32)
+    mrope = cfg.mrope_sections if cfg.mrope_sections[0] else None
+    if mrope is not None:
+        pos3 = jnp.broadcast_to(pos[None, None, None],
+                                (b, 3, 1)).astype(jnp.int32)
+        q = L.apply_mrope(q, pos3, cfg.rope_theta, mrope)
+        k = L.apply_mrope(k, pos3, cfg.rope_theta, mrope)
+    else:
+        q = L.apply_rope(q, posb, cfg.rope_theta)
+        k = L.apply_rope(k, posb, cfg.rope_theta)
+    cache_k = lax.dynamic_update_slice(cache_k, k, (0, pos, 0, 0))
+    cache_v = lax.dynamic_update_slice(cache_v, v, (0, pos, 0, 0))
+    kk = L._repeat_kv(cache_k, nh // g)
+    vv = L._repeat_kv(cache_v, nh // g)
+    smax = cache_k.shape[1]
+    kpos = jnp.arange(smax)
+    valid = kpos <= pos
+    valid &= jnp.where(window > 0, kpos > pos - window, True)
+    out = L.attention_scores(q, kk, vv, mask=valid[None, None, None, :],
+                             scale=hd ** -0.5)
+    a = out.reshape(b, 1, nh * hd) @ blk["attn"]["wo"]
+    return a, cache_k, cache_v
+
+
+def decode_step(params: Dict, cfg: ModelConfig, cache: Dict,
+                tokens: jax.Array) -> Tuple[jax.Array, Dict]:
+    """tokens: [B,1] -> (logits [B,1,V], updated cache)."""
+    h = L.embed(params["emb"], tokens)
+    pos = cache["len"]
+    windows = layer_windows(cfg)
+
+    def body(carry, xs):
+        hh = carry
+        blk, win, ck, cv = xs
+        a, ck, cv = _cached_attention(blk, hh, ck, cv, cfg=cfg, pos=pos,
+                                      window=win)
+        hh = hh + a
+        if cfg.is_moe:
+            m, _ = moe_mod.moe_layer(blk["moe"],
+                                     L.rmsnorm(hh, blk["ln2"], cfg.norm_eps),
+                                     top_k=cfg.top_k,
+                                     capacity_factor=cfg.capacity_factor,
+                                     group_size=cfg.moe_group_size)
+        else:
+            m = L.mlp(blk["mlp"], L.rmsnorm(hh, blk["ln2"], cfg.norm_eps),
+                      cfg.mlp_act)
+        return hh + m, (ck, cv)
+
+    h, (ks, vs) = lax.scan(body, h, (params["blocks"], windows,
+                                     cache["k"], cache["v"]))
+    h = L.rmsnorm(h, params["ln_f"], cfg.norm_eps)
+    logits = (h @ params["emb"]["lm_head"]).astype(jnp.float32)
+    new_cache = {"k": ks, "v": vs, "len": pos + 1}
+    return logits, new_cache
+
+
+def prefill(params: Dict, cfg: ModelConfig, cache: Dict,
+            tokens: jax.Array) -> Tuple[jax.Array, Dict]:
+    """Fill the cache with a full prompt; returns last-position logits."""
+    b, s = tokens.shape
+    h = L.embed(params["emb"], tokens)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    windows = layer_windows(cfg)
+    mrope = cfg.mrope_sections if cfg.mrope_sections[0] else None
+
+    def body(carry, xs):
+        hh = carry
+        blk, win, ck, cv = xs
+        x = L.rmsnorm(hh, blk["ln1"], cfg.norm_eps)
+        q = (x @ blk["attn"]["wq"]).reshape(b, s, cfg.n_heads, cfg.head_dim)
+        k = (x @ blk["attn"]["wk"]).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+        v = (x @ blk["attn"]["wv"]).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+        if mrope is not None:
+            pos3 = jnp.broadcast_to(positions[:, None, :], (b, 3, s))
+            q = L.apply_mrope(q, pos3, cfg.rope_theta, mrope)
+            k = L.apply_mrope(k, pos3, cfg.rope_theta, mrope)
+        else:
+            q = L.apply_rope(q, positions, cfg.rope_theta)
+            k = L.apply_rope(k, positions, cfg.rope_theta)
+        ck = lax.dynamic_update_slice(ck, k, (0, 0, 0, 0))
+        cv = lax.dynamic_update_slice(cv, v, (0, 0, 0, 0))
+        o = L.attention_core(q, k, v, causal=True, window=win,
+                             scale=cfg.head_dim ** -0.5)
+        hh = hh + o.reshape(b, s, -1) @ blk["attn"]["wo"]
+        if cfg.is_moe:
+            m, _ = moe_mod.moe_layer(blk["moe"],
+                                     L.rmsnorm(hh, blk["ln2"], cfg.norm_eps),
+                                     top_k=cfg.top_k,
+                                     capacity_factor=cfg.capacity_factor,
+                                     group_size=cfg.moe_group_size)
+        else:
+            m = L.mlp(blk["mlp"], L.rmsnorm(hh, blk["ln2"], cfg.norm_eps),
+                      cfg.mlp_act)
+        return hh + m, (ck, cv)
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    h, (ks, vs) = lax.scan(body_fn, h, (params["blocks"], windows,
+                                        cache["k"], cache["v"]))
+    h = L.rmsnorm(h[:, -1:], params["ln_f"], cfg.norm_eps)
+    logits = (h @ params["emb"]["lm_head"]).astype(jnp.float32)
+    return logits, {"k": ks, "v": vs, "len": jnp.int32(s)}

@@ -1,0 +1,114 @@
+"""Mixture-of-Experts layer: top-k router + grouped capacity dispatch.
+
+Dispatch uses the grouped one-hot formulation (Switch/GShard style): tokens
+are split into groups of ``group_size``; each group builds a
+``[t, E, C_g]`` dispatch tensor with per-group capacity
+``C_g = ceil(cf * t * k / E)``.  Grouping keeps the dispatch tensor
+O(t^2 k / E) *per group* instead of O(T^2 k / E) globally — the standard
+TPU-friendly static-shape form.
+
+Expert-parallel by construction: the expert dim of the stacked expert
+weights is sharded over the model axis (parallel/sharding.py) and the group
+dim follows the batch sharding, so the dispatch/combine einsums lower to
+the canonical all-to-all pattern under GSPMD.  Tokens overflowing an
+expert's capacity are dropped (their combine weight is 0), as in GShard.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import _ATTN_MESH, _init
+
+
+def _shard_dispatch(x: jax.Array) -> jax.Array:
+    """Constrain [g, t, E, C] dispatch tensors to E-over-model (and groups
+    over the data axes).  The router logits are replicated over the model
+    axis, so each rank can build its experts' slice locally — without the
+    pin, GSPMD all-gathers the full dispatch tensor per layer."""
+    mesh = _ATTN_MESH["mesh"]
+    if mesh is None:
+        return x
+    import math as _math
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    m = mesh.shape.get("model", 1)
+    dp = _ATTN_MESH["dp"]
+    dp_size = _math.prod(mesh.shape[a] for a in dp) if dp else 1
+    g_spec = (dp if len(dp) > 1 else dp[0]) \
+        if (dp and x.shape[0] % dp_size == 0) else None
+    e_spec = "model" if (m > 1 and x.shape[2] % m == 0
+                         and "model" not in dp) else None
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(g_spec, None, e_spec, None)))
+
+
+def init_moe(key, d_model: int, d_ff: int, n_experts: int,
+             dtype=jnp.bfloat16) -> Dict:
+    ks = jax.random.split(key, 4)
+    return {
+        "router": _init(ks[0], (d_model, n_experts), scale=0.02,
+                        dtype=jnp.float32),
+        "w_gate": _init(ks[1], (n_experts, d_model, d_ff), dtype=dtype),
+        "w_up": _init(ks[2], (n_experts, d_model, d_ff), dtype=dtype),
+        "w_down": _init(ks[3], (n_experts, d_ff, d_model), dtype=dtype),
+    }
+
+
+def moe_layer(params: Dict, x: jax.Array, *, top_k: int,
+              capacity_factor: float = 1.25, group_size: int = 4096
+              ) -> Tuple[jax.Array, jax.Array]:
+    """x: [B, S, d] -> (out [B, S, d], aux_loss scalar)."""
+    b, s, d = x.shape
+    e = params["router"].shape[1]
+    n_tok = b * s
+    gsz = min(group_size, n_tok)
+    while n_tok % gsz != 0:
+        gsz //= 2
+    g = n_tok // gsz
+    xg = x.reshape(g, gsz, d)
+
+    logits = jnp.einsum("gtd,de->gte", xg.astype(jnp.float32),
+                        params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)           # [g,t,k]
+    gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)
+
+    # Switch-style load-balance aux loss (over all tokens)
+    me = jnp.mean(probs, axis=(0, 1))                           # [E]
+    fe = jnp.mean(
+        jax.nn.one_hot(gate_idx[..., 0], e, dtype=jnp.float32), (0, 1))
+    aux = e * jnp.sum(me * fe)
+
+    capacity = max(top_k, int(math.ceil(capacity_factor * gsz * top_k / e)))
+
+    onehot = jax.nn.one_hot(gate_idx, e, dtype=jnp.int32)       # [g,t,k,E]
+    flat = onehot.reshape(g, gsz * top_k, e)
+    pos = jnp.cumsum(flat, axis=1) * flat - 1                   # [g,t*k,E]
+    pos = pos.reshape(g, gsz, top_k, e)
+    keep = (pos >= 0) & (pos < capacity)
+    posc = jnp.where(keep, pos, 0)
+
+    disp = jnp.zeros((g, gsz, e, capacity), x.dtype)
+    comb = jnp.zeros((g, gsz, e, capacity), jnp.float32)
+    for slot in range(top_k):                                   # small k
+        sel = (jax.nn.one_hot(posc[:, :, slot], capacity, dtype=jnp.float32)
+               * (keep[:, :, slot].astype(jnp.float32)
+                  * onehot[:, :, slot].astype(jnp.float32))[..., None])
+        disp = disp + sel.astype(x.dtype)
+        comb = comb + sel * gate_vals[:, :, slot, None, None]
+
+    disp = _shard_dispatch(disp)
+    comb = _shard_dispatch(comb)
+
+    xe = jnp.einsum("gtd,gtec->gecd", xg, disp)                 # [g,E,C,d]
+    hgate = jnp.einsum("gecd,edf->gecf", xe, params["w_gate"])
+    hup = jnp.einsum("gecd,edf->gecf", xe, params["w_up"])
+    hact = (jax.nn.silu(hgate.astype(jnp.float32))
+            * hup.astype(jnp.float32)).astype(x.dtype)
+    ye = jnp.einsum("gecf,efd->gecd", hact, params["w_down"])
+    out = jnp.einsum("gecd,gtec->gtd", ye.astype(jnp.float32), comb)
+    return out.reshape(b, s, d).astype(x.dtype), aux

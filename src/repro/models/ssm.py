@@ -1,0 +1,426 @@
+"""State-space / recurrent blocks: Mamba2 (SSD), mLSTM, sLSTM.
+
+Mamba2 and mLSTM share the chunked linear-recurrence template
+
+    S_t = exp(lf_t) * S_{t-1} + exp(li_t) * k_t v_t^T
+    y_t = q_t . S_t
+
+computed in the standard chunkwise-parallel form (intra-chunk masked
+attention + inter-chunk carried state, log-space decays) — sub-quadratic in
+sequence length and scan-friendly for the compiler.  Decode is the O(1)
+single-step recurrence on the carried state (no KV cache).
+
+Projections are stored UNPACKED (separate z/x/B/C/dt tensors rather than
+one fused in_proj) so tensor-parallel sharding boundaries align with
+parameter boundaries (parallel/sharding.py shards the head-structured dims
+over the model axis); XLA re-fuses the matmuls.
+
+sLSTM is inherently sequential (recurrent weights) and runs as a
+``lax.scan`` over time with per-head block-diagonal recurrence.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import _init
+
+
+# ----------------------------------------------------------- chunked CLR --
+
+def _clr_body(S, xs, causal):
+    """One chunk of the linear recurrence (shared by fwd and custom bwd)."""
+    qx, kx, vx, lfx, lix = xs            # [B,chunk,H,*]
+    L = jnp.cumsum(lfx, axis=1)          # [B,chunk,H] inclusive cumsum
+    Ltot = L[:, -1:, :]                  # [B,1,H]
+    # intra-chunk: scores[i,j] = (q_i.k_j) exp(L_i - L_j + li_j), j<=i
+    qk = jnp.einsum("bihn,bjhn->bhij", qx.astype(jnp.float32),
+                    kx.astype(jnp.float32))
+    decay = L[:, :, None, :].transpose(0, 3, 1, 2) \
+        - L[:, None, :, :].transpose(0, 3, 1, 2) \
+        + lix[:, None, :, :].transpose(0, 3, 1, 2)   # [B,H,i,j]
+    scores = qk * jnp.exp(jnp.where(causal[None, None], decay, -jnp.inf))
+    scores = jnp.where(causal[None, None], scores, 0.0)
+    y_intra = jnp.einsum("bhij,bjhp->bihp", scores, vx.astype(jnp.float32))
+    # inter-chunk: y_i += exp(L_i) q_i . S_prev
+    y_inter = jnp.einsum("bihn,bhnp->bihp", qx.astype(jnp.float32)
+                         * jnp.exp(L)[..., None], S)
+    # state update: S = exp(Ltot) S + sum_j exp(Ltot - L_j + li_j) k_j v_j^T
+    w = jnp.exp(Ltot - L + lix)          # [B,chunk,H]
+    S_new = S * jnp.exp(Ltot).transpose(0, 2, 1)[..., None]
+    S_new = S_new + jnp.einsum("bjhn,bjhp->bhnp",
+                               kx.astype(jnp.float32) * w[..., None],
+                               vx.astype(jnp.float32))
+    return S_new, (y_intra + y_inter)
+
+
+@jax.custom_vjp
+def _clr_scan(qc, kc, vc, lfc, lic, S0):
+    """Scan over chunks with a recompute-in-backward VJP: residuals are
+    the per-chunk BOUNDARY states only ([nc,B,H,N,P]) — the default scan
+    VJP stacks every chunk's O(chunk^2) score/decay intermediates."""
+    out, _ = _clr_scan_fwd(qc, kc, vc, lfc, lic, S0)
+    return out
+
+
+def _clr_scan_fwd(qc, kc, vc, lfc, lic, S0):
+    chunk = qc.shape[2]
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def body(S, xs):
+        S_new, y = _clr_body(S, xs, causal)
+        return S_new, (y, S)             # also emit the chunk's IN-state
+
+    S_fin, (yc, S_ins) = lax.scan(body, S0, (qc, kc, vc, lfc, lic))
+    return (yc, S_fin), (qc, kc, vc, lfc, lic, S_ins)
+
+
+def _clr_scan_bwd(res, grads):
+    qc, kc, vc, lfc, lic, S_ins = res
+    dyc, dS_fin = grads
+    chunk = qc.shape[2]
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def step(dS, xs):
+        q1, k1, v1, lf1, li1, S_in, dy = xs
+
+        def f(S, q, k, v, lf, li):
+            return _clr_body(S, (q, k, v, lf, li), causal)
+
+        _, vjp = jax.vjp(f, S_in, q1, k1, v1, lf1, li1)
+        dS_in, dq, dk, dv, dlf, dli = vjp((dS, dy))
+        return dS_in, (dq, dk, dv, dlf, dli)
+
+    def rev(x):
+        return x[::-1]
+
+    dS0, (dqc, dkc, dvc, dlfc, dlic) = lax.scan(
+        step, dS_fin.astype(jnp.float32),
+        (rev(qc), rev(kc), rev(vc), rev(lfc), rev(lic), rev(S_ins),
+         rev(dyc)))
+    return (rev(dqc), rev(dkc), rev(dvc), rev(dlfc), rev(dlic), dS0)
+
+
+_clr_scan.defvjp(lambda *a: _clr_scan_fwd(*a), _clr_scan_bwd)
+
+
+def chunked_linear_recurrence(q: jax.Array, k: jax.Array, v: jax.Array,
+                              lf: jax.Array, li: jax.Array, *,
+                              chunk: int,
+                              state0: Optional[jax.Array] = None
+                              ) -> Tuple[jax.Array, jax.Array]:
+    """q,k: [B,S,H,N]; v: [B,S,H,P]; lf,li: [B,S,H] (log gates, lf<=0).
+
+    Returns (y [B,S,H,P], final_state [B,H,N,P]).
+    """
+    b, s, h, n = q.shape
+    p = v.shape[-1]
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+
+    # [nc, B, chunk, H, ...] for scan over chunks
+    def to_chunks(x):
+        return x.reshape(b, nc, chunk, *x.shape[2:]).swapaxes(0, 1)
+
+    qc, kc, vc = to_chunks(q), to_chunks(k), to_chunks(v)
+    lfc = to_chunks(lf.astype(jnp.float32))
+    lic = to_chunks(li.astype(jnp.float32))
+
+    S0 = (jnp.zeros((b, h, n, p), jnp.float32) if state0 is None
+          else state0.astype(jnp.float32))
+    yc, S_fin = _clr_scan(qc, kc, vc, lfc, lic, S0)
+    y = yc.swapaxes(0, 1).reshape(b, s, h, p)
+    return y.astype(v.dtype), S_fin
+
+
+def linear_recurrence_step(q, k, v, lf, li, state):
+    """One decode step.  q,k: [B,H,N]; v: [B,H,P]; lf,li: [B,H];
+    state: [B,H,N,P].  Returns (y [B,H,P], new_state)."""
+    f = jnp.exp(lf.astype(jnp.float32))[..., None, None]
+    i = jnp.exp(li.astype(jnp.float32))[..., None, None]
+    state = state * f + i * jnp.einsum("bhn,bhp->bhnp", k.astype(jnp.float32),
+                                       v.astype(jnp.float32))
+    y = jnp.einsum("bhn,bhnp->bhp", q.astype(jnp.float32), state)
+    return y.astype(v.dtype), state
+
+
+def _gated_rmsnorm(y: jax.Array, z: jax.Array, w: jax.Array,
+                   eps: float = 1e-6) -> jax.Array:
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    yf = yf * lax.rsqrt(var + eps) * (1.0 + w.astype(jnp.float32))
+    return yf.astype(y.dtype)
+
+
+# --------------------------------------------------------------- Mamba2 ---
+
+def init_mamba2(key, d_model: int, *, expand: int, state: int,
+                head_dim: int, dtype=jnp.bfloat16) -> Dict:
+    di = expand * d_model
+    nh = di // head_dim
+    ks = jax.random.split(key, 9)
+    return {
+        "w_z": _init(ks[0], (d_model, di), dtype=dtype),
+        "w_x": _init(ks[1], (d_model, di), dtype=dtype),
+        "w_B": _init(ks[2], (d_model, state), dtype=dtype),
+        "w_C": _init(ks[3], (d_model, state), dtype=dtype),
+        "w_dt": _init(ks[4], (d_model, nh), dtype=dtype),
+        "out_proj": _init(ks[5], (di, d_model), dtype=dtype),
+        "conv_x": _init(ks[6], (4, di), scale=0.5, dtype=dtype),
+        "conv_B": _init(ks[7], (4, state), scale=0.5, dtype=dtype),
+        "conv_C": _init(ks[8], (4, state), scale=0.5, dtype=dtype),
+        "A_log": jnp.zeros((nh,), jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm_w": jnp.zeros((di,), dtype),
+    }
+
+
+def _causal_conv1d(x: jax.Array, w: jax.Array,
+                   state: Optional[jax.Array] = None
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv, width K.  x: [B,S,C]; w: [K,C].
+    state: [B,K-1,C] trailing context.  Returns (y, new_state)."""
+    kk = w.shape[0]
+    pad = (jnp.zeros((x.shape[0], kk - 1, x.shape[2]), x.dtype)
+           if state is None else state.astype(x.dtype))
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+            for i in range(kk))
+    return jax.nn.silu(y), xp[:, -(kk - 1):, :]
+
+
+def mamba2_block(params: Dict, x: jax.Array, *, expand: int, state: int,
+                 head_dim: int, chunk: int,
+                 ssm_state: Optional[Dict] = None,
+                 decode: bool = False) -> Tuple[jax.Array, Optional[Dict]]:
+    """x: [B,S,d].  In decode mode S==1 and ``ssm_state`` carries
+    {"conv_x","conv_B","conv_C" (trailing contexts), "ssd": [B,H,N,P]}."""
+    b, s, d = x.shape
+    di = expand * d
+    nh = di // head_dim
+    z = x @ params["w_z"]
+    xb = x @ params["w_x"]
+    B = x @ params["w_B"]
+    C = x @ params["w_C"]
+    dt = x @ params["w_dt"]
+
+    st = ssm_state or {}
+    xb, ncx = _causal_conv1d(xb, params["conv_x"], st.get("conv_x"))
+    B, ncb = _causal_conv1d(B, params["conv_B"], st.get("conv_B"))
+    C, ncc = _causal_conv1d(C, params["conv_C"], st.get("conv_C"))
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"])                    # [B,S,H]
+    A = -jnp.exp(params["A_log"])                                # [H]
+    lf = dt * A                                                  # log forget
+    li = jnp.log(dt + 1e-9)                                      # log input
+
+    v = xb.reshape(b, s, nh, head_dim)
+    qh = jnp.broadcast_to(C[:, :, None, :], (b, s, nh, state))
+    kh = jnp.broadcast_to(B[:, :, None, :], (b, s, nh, state))
+
+    if decode:
+        y, S = linear_recurrence_step(
+            qh[:, 0], kh[:, 0], v[:, 0], lf[:, 0], li[:, 0], st["ssd"])
+        y = y[:, None]
+    else:
+        y, S = chunked_linear_recurrence(qh, kh, v, lf, li, chunk=chunk,
+                                         state0=st.get("ssd"))
+    y = (y + v * params["D"][None, None, :, None]).astype(x.dtype)
+    y = y.reshape(b, s, di)
+    out = _gated_rmsnorm(y, z, params["norm_w"]) @ params["out_proj"]
+    new_state = ({"conv_x": ncx, "conv_B": ncb, "conv_C": ncc, "ssd": S}
+                 if (decode or ssm_state is not None) else None)
+    return out, new_state
+
+
+# ---------------------------------------------------------------- mLSTM ---
+
+def init_mlstm(key, d_model: int, *, expand: int, n_heads: int,
+               dtype=jnp.bfloat16) -> Dict:
+    di = expand * d_model
+    ks = jax.random.split(key, 7)
+    return {
+        "w_x": _init(ks[0], (d_model, di), dtype=dtype),
+        "w_z": _init(ks[1], (d_model, di), dtype=dtype),
+        "wq": _init(ks[2], (di, di), dtype=dtype),
+        "wk": _init(ks[3], (di, di), dtype=dtype),
+        "wv": _init(ks[4], (di, di), dtype=dtype),
+        "gates": _init(ks[5], (di, 2 * n_heads), scale=0.02,
+                       dtype=jnp.float32),
+        "out_proj": _init(ks[6], (di, d_model), dtype=dtype),
+        "norm_w": jnp.zeros((di,), dtype),
+    }
+
+
+def mlstm_block(params: Dict, x: jax.Array, *, expand: int, n_heads: int,
+                chunk: int, ssm_state: Optional[Dict] = None,
+                decode: bool = False) -> Tuple[jax.Array, Optional[Dict]]:
+    b, s, d = x.shape
+    di = expand * d
+    hd = di // n_heads
+    xi = x @ params["w_x"]
+    z = x @ params["w_z"]
+    q = (xi @ params["wq"]).reshape(b, s, n_heads, hd)
+    k = (xi @ params["wk"]).reshape(b, s, n_heads, hd) * hd ** -0.5
+    v = (xi @ params["wv"]).reshape(b, s, n_heads, hd)
+    gates = xi.astype(jnp.float32) @ params["gates"]               # [B,S,2H]
+    lf = jax.nn.log_sigmoid(gates[..., :n_heads])                  # forget
+    li = jax.nn.log_sigmoid(gates[..., n_heads:])                  # input
+
+    # normalizer trick: append a ones column to v
+    v_ext = jnp.concatenate([v, jnp.ones((*v.shape[:-1], 1), v.dtype)], -1)
+    st = ssm_state or {}
+    if decode:
+        y_ext, S = linear_recurrence_step(q[:, 0], k[:, 0], v_ext[:, 0],
+                                          lf[:, 0], li[:, 0], st["ssd"])
+        y_ext = y_ext[:, None]
+    else:
+        y_ext, S = chunked_linear_recurrence(q, k, v_ext, lf, li,
+                                             chunk=chunk,
+                                             state0=st.get("ssd"))
+    y, nrm = y_ext[..., :hd], y_ext[..., hd:]
+    y = y / jnp.maximum(jnp.abs(nrm), 1.0)
+    y = y.reshape(b, s, di)
+    out = _gated_rmsnorm(y, z, params["norm_w"]) @ params["out_proj"]
+    new_state = ({"ssd": S} if (decode or ssm_state is not None) else None)
+    return out, new_state
+
+
+# ---------------------------------------------------------------- sLSTM ---
+
+def _slstm_gates(gates, c, n):
+    """Pointwise sLSTM cell given pre-activations.  gates: [B,H,4*hd]."""
+    zi, ii, fi, oi = jnp.split(gates, 4, axis=-1)
+    zt = jnp.tanh(zi)
+    it = jnp.exp(jnp.minimum(ii, 10.0))
+    ft = jax.nn.sigmoid(fi)
+    ot = jax.nn.sigmoid(oi)
+    c2 = ft * c + it * zt
+    n2 = ft * n + it
+    h2 = ot * c2 / jnp.maximum(jnp.abs(n2), 1.0)
+    return c2, n2, h2
+
+
+@jax.custom_vjp
+def _slstm_scan(pre, r, bias, carry0):
+    """pre: [B,S,H,4hd] f32; r: [H,hd,4hd] f32; bias: [H,4hd] f32;
+    carry0: (c,n,h) each [B,H,hd] f32.  Returns (hs [B,S,H,hd], carry).
+
+    Custom VJP so the recurrent-weight gradient accumulates PER BATCH
+    ELEMENT inside the reverse loop (no cross-device contraction inside —
+    the batch reduction happens once after the loop).  The default scan
+    VJP lets GSPMD psum the weight cotangent on every timestep: one
+    latency-bound all-reduce per token.
+    """
+    out, _ = _slstm_scan_fwd(pre, r, bias, carry0)
+    return out
+
+
+def _slstm_scan_fwd(pre, r, bias, carry0):
+    def step(carry, pre_t):
+        c, n, h = carry
+        gates = pre_t + jnp.einsum("bhd,hdk->bhk", h, r) + bias
+        c2, n2, h2 = _slstm_gates(gates, c, n)
+        return (c2, n2, h2), (c2, n2, h2)
+
+    carry, (cs, ns, hs) = lax.scan(step, carry0, pre.swapaxes(0, 1))
+    hs_out = hs.swapaxes(0, 1)                       # [B,S,H,hd]
+    return (hs_out, carry), (pre, r, bias, carry0, cs, ns, hs)
+
+
+def _slstm_scan_bwd(res, grads):
+    pre, r, bias, carry0, cs, ns, hs = res
+    dys, (dcf, dnf, dhf) = grads
+    b, s, h, hd4 = pre.shape
+    # previous-step states (t-1), with the initial carry prepended
+    c_prev = jnp.concatenate([carry0[0][None], cs[:-1]], axis=0)
+    n_prev = jnp.concatenate([carry0[1][None], ns[:-1]], axis=0)
+    h_prev = jnp.concatenate([carry0[2][None], hs[:-1]], axis=0)
+
+    def step(carry, xs):
+        dc, dn, dh, dr_b, dbias_b = carry
+        pre_t, cp, np_, hp, dy_t = xs
+        dh = dh + dy_t
+
+        def f(gates, c, n):
+            return _slstm_gates(gates, c, n)
+
+        gates = pre_t + jnp.einsum("bhd,hdk->bhk", hp, r) + bias
+        _, vjp = jax.vjp(f, gates, cp, np_)
+        dgates, dc_p, dn_p = vjp((dc, dn, dh))
+        dh_p = jnp.einsum("bhk,hdk->bhd", dgates, r)
+        # per-batch weight grads: outer products, NO cross-batch reduce
+        dr_b = dr_b + jnp.einsum("bhd,bhk->bhdk", hp, dgates)
+        dbias_b = dbias_b + dgates
+        return (dc_p, dn_p, dh_p, dr_b, dbias_b), dgates
+
+    zeros_small = jnp.zeros_like(carry0[0])
+    dr_b0 = jnp.zeros(h_prev.shape[1:] + (pre.shape[-1],), jnp.float32)
+    dbias_b0 = jnp.zeros((b, h, hd4), jnp.float32)
+    (dc0, dn0, dh0, dr_b, dbias_b), dpre_rev = lax.scan(
+        step, (dcf, dnf, dhf, dr_b0, dbias_b0),
+        (pre.swapaxes(0, 1)[::-1], c_prev[::-1], n_prev[::-1],
+         h_prev[::-1], dys.swapaxes(0, 1)[::-1]))
+    dpre = dpre_rev[::-1].swapaxes(0, 1)
+    dr = jnp.sum(dr_b, axis=0)          # the ONE batch contraction
+    dbias = jnp.sum(dbias_b, axis=0)
+    return dpre, dr, dbias, (dc0, dn0, dh0)
+
+
+_slstm_scan.defvjp(lambda pre, r, bias, c0: _slstm_scan_fwd(pre, r, bias,
+                                                            c0),
+                   _slstm_scan_bwd)
+
+
+def init_slstm(key, d_model: int, *, n_heads: int,
+               dtype=jnp.bfloat16) -> Dict:
+    hd = d_model // n_heads
+    ks = jax.random.split(key, 3)
+    return {
+        "w_in": _init(ks[0], (d_model, 4 * d_model), dtype=dtype),
+        "r": _init(ks[1], (n_heads, hd, 4 * hd), dtype=dtype),
+        "bias": jnp.zeros((4 * d_model,), jnp.float32),
+        "out_proj": _init(ks[2], (d_model, d_model), dtype=dtype),
+    }
+
+
+def slstm_block(params: Dict, x: jax.Array, *, n_heads: int,
+                ssm_state: Optional[Dict] = None,
+                decode: bool = False) -> Tuple[jax.Array, Optional[Dict]]:
+    """Sequential sLSTM with per-head block-diagonal recurrence.
+
+    state: {"c","n","h"} each [B, H, hd].
+    """
+    b, s, d = x.shape
+    hd = d // n_heads
+    pre = (x @ params["w_in"]).astype(jnp.float32) \
+        .reshape(b, s, n_heads, 4 * hd)
+    r = params["r"].astype(jnp.float32)
+    bias = params["bias"].reshape(n_heads, 4 * hd)
+
+    if ssm_state is None:
+        zeros = jnp.zeros((b, n_heads, hd), jnp.float32)
+        carry = (zeros, zeros, zeros)
+    else:
+        carry = (ssm_state["c"], ssm_state["n"], ssm_state["h"])
+
+    if decode:
+        c, n, h = carry
+        gates = pre[:, 0] + jnp.einsum("bhd,hdk->bhk", h, r) + bias
+        carry = _slstm_gates(gates, c, n)
+        ys = carry[2][:, None]
+    else:
+        ys, carry = _slstm_scan(pre, r, bias, carry)
+    y = ys.reshape(b, s if not decode else 1, d).astype(x.dtype)
+    out = y @ params["out_proj"]
+    c, n, h = carry
+    new_state = ({"c": c, "n": n, "h": h}
+                 if (decode or ssm_state is not None) else None)
+    return out, new_state

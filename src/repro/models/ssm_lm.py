@@ -1,0 +1,151 @@
+"""xLSTM-style LM (family "ssm"): mLSTM blocks with periodic sLSTM blocks.
+
+Because mLSTM and sLSTM have different parameter structures, the layer
+stack is organized as scan-over-mLSTM-layers with sLSTM blocks spliced in
+at fixed depths (cfg.slstm_every); the sLSTM blocks are stacked and scanned
+separately.  Decode carries per-layer recurrent states — O(1) memory in
+sequence length, which is why this family runs the long_500k cell.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers as L
+from repro.models import ssm
+from repro.models.config import ModelConfig
+
+
+def _n_slstm(cfg: ModelConfig) -> int:
+    return cfg.n_layers // cfg.slstm_every if cfg.slstm_every else 0
+
+
+def init_ssm_lm(key, cfg: ModelConfig) -> Dict:
+    ke, km, ks = jax.random.split(key, 3)
+    n_s = _n_slstm(cfg)
+    n_m = cfg.n_layers - n_s
+    mblocks = jax.vmap(lambda k: {
+        "ln": L.init_rmsnorm(cfg.d_model, cfg.jdtype),
+        "mlstm": ssm.init_mlstm(k, cfg.d_model, expand=cfg.ssm_expand,
+                                n_heads=cfg.n_heads, dtype=cfg.jdtype),
+    })(jax.random.split(km, n_m))
+    params = {
+        "emb": L.init_embeddings(ke, cfg.vocab, cfg.d_model, cfg.jdtype),
+        "mblocks": mblocks,
+        "ln_f": L.init_rmsnorm(cfg.d_model, cfg.jdtype),
+    }
+    if n_s:
+        params["sblocks"] = jax.vmap(lambda k: {
+            "ln": L.init_rmsnorm(cfg.d_model, cfg.jdtype),
+            "slstm": ssm.init_slstm(k, cfg.d_model, n_heads=cfg.n_heads,
+                                    dtype=cfg.jdtype),
+        })(jax.random.split(ks, n_s))
+    return params
+
+
+def _apply_stacks(params: Dict, cfg: ModelConfig, h: jax.Array, *,
+                  states: Optional[Dict], decode: bool
+                  ) -> Tuple[jax.Array, Optional[Dict]]:
+    """Scan mLSTM stack, then sLSTM stack (depth-interleaving is
+    order-equivalent for these residual stacks at our scale; recorded in
+    DESIGN.md §6)."""
+    n_s = _n_slstm(cfg)
+    track = decode or states is not None
+
+    def mbody(carry, xs):
+        hh = carry
+        if track:
+            blk, st = xs
+        else:
+            blk, st = xs, None
+        y, st2 = ssm.mlstm_block(blk["mlstm"],
+                                 L.rmsnorm(hh, blk["ln"], cfg.norm_eps),
+                                 expand=cfg.ssm_expand, n_heads=cfg.n_heads,
+                                 chunk=cfg.ssm_chunk, ssm_state=st,
+                                 decode=decode)
+        return hh + y, st2
+
+    xs = (params["mblocks"], states["m"]) if track else params["mblocks"]
+    mbody_fn = jax.checkpoint(mbody) if (cfg.remat and not decode) else mbody
+    h, mst = lax.scan(mbody_fn, h, xs)
+
+    sst = None
+    if n_s:
+        def sbody(carry, xs):
+            hh = carry
+            if track:
+                blk, st = xs
+            else:
+                blk, st = xs, None
+            y, st2 = ssm.slstm_block(blk["slstm"],
+                                     L.rmsnorm(hh, blk["ln"], cfg.norm_eps),
+                                     n_heads=cfg.n_heads, ssm_state=st,
+                                     decode=decode)
+            return hh + y, st2
+
+        xs = (params["sblocks"], states["s"]) if track else params["sblocks"]
+        sbody_fn = jax.checkpoint(sbody) if (cfg.remat and not decode) \
+            else sbody
+        h, sst = lax.scan(sbody_fn, h, xs)
+
+    new_states = {"m": mst, "s": sst} if track else None
+    return h, new_states
+
+
+def forward_ssm_lm(params: Dict, cfg: ModelConfig,
+                   tokens: jax.Array, positions=None,
+                   vision_embeds=None) -> jax.Array:
+    h = L.embed(params["emb"], tokens)
+    h, _ = _apply_stacks(params, cfg, h, states=None, decode=False)
+    return L.rmsnorm(h, params["ln_f"], cfg.norm_eps)
+
+
+def loss_ssm_lm(params: Dict, cfg: ModelConfig, batch: Dict) -> jax.Array:
+    h = forward_ssm_lm(params, cfg, batch["tokens"])
+    return L.chunked_cross_entropy(h, params["emb"]["lm_head"],
+                                   batch["labels"])
+
+
+def init_cache_ssm(cfg: ModelConfig, batch: int, max_seq: int) -> Dict:
+    """Recurrent state 'cache' — size independent of max_seq."""
+    di = cfg.ssm_expand * cfg.d_model
+    hd = di // cfg.n_heads
+    n_s = _n_slstm(cfg)
+    n_m = cfg.n_layers - n_s
+    cache = {
+        "m": {"ssd": jnp.zeros((n_m, batch, cfg.n_heads, hd, hd + 1),
+                               jnp.float32)},
+        "s": None,
+        "len": jnp.zeros((), jnp.int32),
+    }
+    if n_s:
+        shd = cfg.d_model // cfg.n_heads
+        z = jnp.zeros((n_s, batch, cfg.n_heads, shd), jnp.float32)
+        cache["s"] = {"c": z, "n": z, "h": z}
+    return cache
+
+
+def decode_step_ssm(params: Dict, cfg: ModelConfig, cache: Dict,
+                    tokens: jax.Array) -> Tuple[jax.Array, Dict]:
+    h = L.embed(params["emb"], tokens)
+    states = {"m": cache["m"], "s": cache["s"]}
+    h, new_states = _apply_stacks(params, cfg, h, states=states, decode=True)
+    h = L.rmsnorm(h, params["ln_f"], cfg.norm_eps)
+    logits = (h @ params["emb"]["lm_head"]).astype(jnp.float32)
+    return logits, {"m": new_states["m"], "s": new_states["s"],
+                    "len": cache["len"] + 1}
+
+
+def prefill_ssm(params: Dict, cfg: ModelConfig, cache: Dict,
+                tokens: jax.Array) -> Tuple[jax.Array, Dict]:
+    h = L.embed(params["emb"], tokens)
+    states = {"m": cache["m"], "s": cache["s"]}
+    h, new_states = _apply_stacks(params, cfg, h, states=states, decode=False)
+    h = L.rmsnorm(h[:, -1:], params["ln_f"], cfg.norm_eps)
+    logits = (h @ params["emb"]["lm_head"]).astype(jnp.float32)
+    return logits, {"m": new_states["m"], "s": new_states["s"],
+                    "len": cache["len"] + tokens.shape[1]}

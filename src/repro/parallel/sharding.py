@@ -1,0 +1,321 @@
+"""Sharding rules: the paper's grid synthesizer deciding per-layer TP.
+
+For every weight matmul ``[.., cin, cout]`` we CNN-ize the operator
+(`ConvProblem.from_matmul(tokens, cout, cin)`) and ask the paper's
+synthesizer (core/sharding_synthesis.py) where the *model* mesh axis pays
+off best:
+
+  model -> 'k'    shard cout   (Megatron column parallel / 2D grid k-axis)
+  model -> 'c'    shard cin    (row parallel + psum — the 2.5D/3D c-axis)
+  model -> 'bhw'  replicate the weight (pure data parallel for this op)
+
+Data axes are always pinned to 'bhw' (activations flow between layers).
+The decision per weight kind is cached per (arch, mesh, tokens) and
+reported by the dry-run (EXPERIMENTS.md shows which regime each layer
+landed in).  FSDP additionally shards a weight dim over the data axis
+(ZeRO-3: per-layer all-gather inside scan).
+"""
+
+from __future__ import annotations
+
+import functools
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.problem import ConvProblem
+from repro.core.sharding_synthesis import synthesize_layer
+from repro.models.config import ModelConfig
+
+# HBM budget per chip (elements, bf16) for the node-level synthesis
+HBM_ELEMS = 8 * 1024 ** 3  # 16 GB / 2 B
+
+
+def _op_cost(m: int, n: int, k: int, pbhw: int, pk: int, pc: int,
+             M_L: float) -> float:
+    """Eq. 3 cost of one matmul operator under a concrete grid."""
+    from repro.core import cost_model
+    from repro.core.cost_model import TileChoice
+    from repro.core.tile_optimizer import _best_tiles_given_W
+    prob = ConvProblem.from_matmul(m, n, k)
+    if pbhw > prob.Nbhw or pk > prob.Nk or pc > prob.Nc:
+        return float("inf")
+    Wbhw, Wk, Wc = prob.Nbhw / pbhw, prob.Nk / pk, prob.Nc / pc
+    Tbhw, Tk = _best_tiles_given_W(prob, Wbhw, Wk, M_L)
+    return cost_model.cost_global_memory(
+        prob, TileChoice(Wbhw=Wbhw, Wk=Wk, Wc=Wc, Tbhw=Tbhw, Tk=Tk))
+
+
+@functools.lru_cache(maxsize=65536)
+def _decide(tokens: int, cin: int, cout: int, data: int, model: int,
+            pod: int, train: bool, budget_elems: int) -> str:
+    """Where the model axis pays off best for this matmul, per the paper's
+    cost model ('k' | 'c' | 'bhw').
+
+    Training evaluates the full step as THREE instances of the paper's
+    operator with role-permuted grids — fwd ([m,c]x[c,k]), dIn
+    ([m,k]x[k,c]) and dKer ([c,m]x[m,k]) — so the weight-gradient
+    reduction of pure data parallelism is priced in (it is dKer's
+    contraction-axis term).  Serving prices only the forward op.
+
+    ``budget_elems`` is this weight's proportional share of per-device HBM
+    (the paper's Eq. 11 residency constraint g_D <= M_D, distributed over
+    the model's weights): assignments whose resident shard exceeds it are
+    infeasible — this is what pushes big models from the 2D/DP regime into
+    the TP regimes, exactly as the paper's memory/communication trade-off
+    dictates.
+    """
+    tokens = max(tokens, 1)
+    dp = data * pod
+    best, best_cost = None, float("inf")
+    for where in ("bhw", "k", "c"):
+        pbhw = dp * (model if where == "bhw" else 1)
+        pk = model if where == "k" else 1
+        pc = model if where == "c" else 1
+        shard_elems = (cin * cout) / (pk * pc)
+        if shard_elems > budget_elems and where == "bhw":
+            continue
+        cost = _op_cost(tokens, cout, cin, pbhw, pk, pc, HBM_ELEMS)
+        if train:
+            cost += _op_cost(tokens, cin, cout, pbhw, pc, pk, HBM_ELEMS)
+            cost += _op_cost(cin, cout, tokens, pc, pk, pbhw, HBM_ELEMS)
+        if cost < best_cost:
+            best, best_cost = where, cost
+    return best or "k"
+
+
+def decide_model_axis(cfg_tokens: int, cin: int, cout: int, mesh: Mesh,
+                      *, train: bool = True,
+                      budget_elems: int = 1 << 62) -> str:
+    return _decide(cfg_tokens, cin, cout,
+                   int(mesh.shape.get("data", 1)),
+                   int(mesh.shape.get("model", 1)),
+                   int(mesh.shape.get("pod", 1)), train, budget_elems)
+
+
+# --------------------------------------------------------------------------
+# Parameter specs
+# --------------------------------------------------------------------------
+
+# weight kinds: path regex -> (cin_dim, cout_dim) relative to the unstacked
+# tensor; None = never sharded over model.
+_MATMUL_KINDS = [
+    (r"attn/wq$", (0, 1)), (r"attn/wk$", (0, 1)), (r"attn/wv$", (0, 1)),
+    (r"attn/wo$", (0, 1)),
+    (r"xattn/wq$", (0, 1)), (r"xattn/wk$", (0, 1)), (r"xattn/wv$", (0, 1)),
+    (r"xattn/wo$", (0, 1)),
+    (r"mlp/w_up$", (0, 1)), (r"mlp/w_gate$", (0, 1)),
+    (r"mlp/w_down$", (0, 1)),
+    (r"mlstm/w_x$", (0, 1)), (r"mlstm/w_z$", (0, 1)),
+    (r"mlstm/wq$", (0, 1)), (r"mlstm/wk$", (0, 1)), (r"mlstm/wv$", (0, 1)),
+    (r"mlstm/out_proj$", (0, 1)),
+    (r"mamba/w_z$", (0, 1)), (r"mamba/w_x$", (0, 1)),
+    (r"mamba/w_dt$", (0, 1)), (r"mamba/out_proj$", (0, 1)),
+    (r"slstm/w_in$", (0, 1)), (r"slstm/out_proj$", (0, 1)),
+]
+
+# MoE expert weights: [E, cin, cout] — expert dim over model (EP);
+# router stays replicated.
+_MOE_RE = re.compile(r"moe/(w_gate|w_up|w_down)$")
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                    for p in path)
+
+
+def param_specs(cfg: ModelConfig, params_shape: Any, mesh: Mesh, *,
+                tokens_per_step: int, train: bool = True) -> Any:
+    """Build a PartitionSpec tree for a (possibly eval_shape'd) param tree."""
+    has_model = "model" in mesh.shape and mesh.shape["model"] > 1
+    fsdp_ax = "data" if (cfg.fsdp and "data" in mesh.shape
+                         and mesh.shape["data"] > 1) else None
+    decisions: Dict[str, str] = {}
+
+    # Eq. 11 residency budget: each weight's fair share of the usable HBM,
+    # at the training (param+grad+adam f32 = 14B/elem) or serving (2B/elem)
+    # state size.
+    total_elems = sum(int(np.prod(l.shape))
+                      for l in jax.tree.leaves(params_shape))
+    hbm_usable = 0.6 * 16e9
+    state_bytes = 14.0 if train else 2.0
+
+    def spec_for(path, leaf, _pass=1) -> P:
+        name = _path_str(path)
+        shape = leaf.shape
+        stacked = int(name.startswith(("blocks/", "mblocks/", "sblocks/",
+                                       "enc/", "dec/")))
+        nd = len(shape)
+
+        def build(model_dim: Optional[int], fsdp_dim: Optional[int]) -> P:
+            spec = [None] * nd
+            if model_dim is not None and has_model \
+                    and shape[model_dim] % mesh.shape["model"] == 0:
+                spec[model_dim] = "model"
+            if fsdp_dim is not None and fsdp_ax is not None \
+                    and shape[fsdp_dim] % mesh.shape[fsdp_ax] == 0 \
+                    and spec[fsdp_dim] is None:
+                spec[fsdp_dim] = fsdp_ax
+            return P(*spec)
+
+        def divisible(dim: int) -> bool:
+            return has_model and shape[dim] % mesh.shape["model"] == 0
+
+        # embeddings: vocab over model (column/row parallel); if the vocab
+        # isn't divisible, shard the d_model dim instead.
+        if name.endswith("emb/tok"):
+            return build(0, 1) if divisible(0) else build(1, 0)
+        if name.endswith("emb/lm_head"):
+            return build(1, 0) if divisible(1) else build(0, 1)
+
+        # MoE experts: expert dim over model; fsdp on cin
+        if _MOE_RE.search(name):
+            return build(stacked, stacked + 1)
+
+        # matmul kinds -> ask the paper's synthesizer
+        for pat, (ci, co) in _MATMUL_KINDS:
+            if re.search(pat, name):
+                cin = shape[stacked + ci]
+                cout = shape[stacked + co]
+                n_elems = int(np.prod(shape))
+                budget = int(hbm_usable * (n_elems / total_elems)
+                             / state_bytes
+                             / max(shape[0] if stacked else 1, 1))
+                where = decide_model_axis(tokens_per_step, cin, cout, mesh,
+                                          train=train, budget_elems=budget)
+                # Inter-operator consistency (beyond the paper's per-op
+                # scope): an output projection must CONSUME the sharding
+                # its producer emits — wo pairs with wq, w_down with
+                # w_up/w_gate.  A 'k' producer emits feature-sharded
+                # activations, so the consumer takes 'c' (row parallel,
+                # one psum) instead of forcing an activation all-gather.
+                base = name.rsplit("/", 1)[0]
+                if name.endswith(("/wo", "/out_proj", "/w_down")):
+                    producers = ([base + "/wq"] if name.endswith("/wo")
+                                 else [base + "/w_up"]
+                                 if name.endswith("/w_down")
+                                 else [base + "/wq", base + "/w_x"])
+                    producer = next((decisions[p] for p in producers
+                                     if p in decisions), None)
+                    if producer == "k" and divisible(stacked + ci):
+                        where = "c"
+                    elif producer == "bhw":
+                        where = "bhw"
+                # divisibility fallback chain: chosen -> other -> replicate
+                if where == "k" and not divisible(stacked + co):
+                    where = "c" if divisible(stacked + ci) else "bhw"
+                elif where == "c" and not divisible(stacked + ci):
+                    where = "k" if divisible(stacked + co) else "bhw"
+                decisions[name] = where
+                if where == "k":
+                    return build(stacked + co, stacked + ci)
+                if where == "c":
+                    return build(stacked + ci, stacked + co)
+                return build(None, stacked + ci)
+
+        # norms / scalars / conv kernels / router: replicated
+        return P(*([None] * nd))
+
+    # two passes: pass 1 decides producers (wq/w_up/...), pass 2 lets the
+    # consumers (wo/w_down/out_proj) pair with them regardless of tree
+    # traversal order.
+    flat = jax.tree_util.tree_flatten_with_path(params_shape)[0]
+    paired = ("/wo", "/out_proj", "/w_down")
+    for path, leaf in flat:
+        if not _path_str(path).endswith(paired):
+            spec_for(path, leaf)
+    specs = jax.tree_util.tree_map_with_path(spec_for, params_shape)
+    param_specs.last_decisions = decisions
+    return specs
+
+
+# --------------------------------------------------------------------------
+# Batch / cache specs
+# --------------------------------------------------------------------------
+
+def dp_axes(mesh: Mesh, *, include_model: bool = False) -> Tuple[str, ...]:
+    names = ("pod", "data", "model") if include_model else ("pod", "data")
+    return tuple(a for a in names if a in mesh.shape and mesh.shape[a] > 1)
+
+
+def pure_dp(decisions: Dict[str, str]) -> bool:
+    """True when the synthesizer put every matmul in the 'bhw' (2D/DP)
+    regime — the model axis then carries batch, exactly the paper's
+    P_bhw = P prescription for small models."""
+    return bool(decisions) and all(v == "bhw" for v in decisions.values())
+
+
+def batch_specs(cfg: ModelConfig, mesh: Mesh, batch: Dict[str, Any],
+                *, global_batch: int,
+                include_model: bool = False) -> Dict[str, P]:
+    dp = dp_axes(mesh, include_model=include_model)
+    # shard batch over as many dp axes as divide it
+    use: Tuple[str, ...] = ()
+    rem = global_batch
+    for a in dp:
+        if rem % mesh.shape[a] == 0:
+            use = use + (a,)
+            rem //= mesh.shape[a]
+    bspec = use if len(use) != 1 else use[0]
+
+    def spec_for(path, leaf):
+        nd = len(leaf.shape)
+        if not use:
+            return P(*([None] * nd))
+        return P(bspec, *([None] * (nd - 1)))
+
+    return jax.tree_util.tree_map_with_path(spec_for, batch)
+
+
+def cache_specs(cfg: ModelConfig, mesh: Mesh, cache: Any, *,
+                batch: int, include_model: bool = False) -> Any:
+    """KV caches: batch over data axes, cache SEQUENCE over the model axis
+    (flash-decoding style sequence-parallel attention — GSPMD decomposes
+    the softmax/contraction over the sharded key dim into cheap psums).
+    SSM states: batch over data, head dim over model when divisible."""
+    dp = dp_axes(mesh, include_model=include_model)
+    use: Tuple[str, ...] = ()
+    rem = batch
+    for a in dp:
+        if rem % mesh.shape[a] == 0:
+            use = use + (a,)
+            rem //= mesh.shape[a]
+    bspec = (use if len(use) != 1 else use[0]) if use else None
+    model = "model" if ("model" in mesh.shape and mesh.shape["model"] > 1
+                        and not include_model) else None
+    msize = mesh.shape.get("model", 1)
+
+    def spec_for(path, leaf):
+        name = _path_str(path)
+        shape = leaf.shape
+        nd = len(shape)
+        if nd == 0:
+            return P()
+        stacked = int(nd >= 4)  # [L, B, ...] layouts
+        spec = [None] * nd
+        if bspec is not None and nd > stacked:
+            spec[stacked] = bspec
+        if name.split("/")[-1] in ("k", "v", "xk", "xv") and nd >= 4:
+            # [L, B, S, G, hd]: sequence over model
+            if model and shape[stacked + 1] % msize == 0:
+                spec[stacked + 1] = model
+        elif "ssd" in name and nd >= 4:
+            # [L, B, H, N, P]: heads over model
+            if model and shape[stacked + 1] % msize == 0:
+                spec[stacked + 1] = model
+        elif name.startswith("conv") and nd >= 3:
+            if model and shape[-1] % msize == 0:
+                spec[-1] = model
+        elif ("m/" in name or name.startswith(("c", "n", "h"))) and nd >= 3:
+            pass  # small recurrent states: batch-sharded only
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache)
+
+
+def named(mesh: Mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,74 @@
+"""Paper core: analytic cost model vs simulated tiled execution, and the
+distributed-cost offset identity from Sec. 2.2."""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cost_model
+from repro.core.cost_model import TileChoice
+from repro.core.problem import ConvProblem, resnet50_layers
+
+
+def exact_problem_and_tiles():
+    """Small problems where tiles divide extents exactly (the closed-form
+    cost assumes exact tiling)."""
+    return st.tuples(
+        st.sampled_from([1, 2, 4]),        # Tb divides Nb=4
+        st.sampled_from([1, 2, 4, 8]),     # Tk divides Nk=8
+        st.sampled_from([1, 2, 4]),        # Th divides Nh=4
+        st.sampled_from([1, 2, 4]),        # Tw divides Nw=4
+        st.sampled_from([1, 3]),           # Nr/Ns
+    )
+
+
+@settings(max_examples=40, deadline=None)
+@given(exact_problem_and_tiles())
+def test_eq3_matches_simulated_movement(tile):
+    tb, tk, th, tw, nr = tile
+    p = ConvProblem(Nb=4, Nk=8, Nc=6, Nh=4, Nw=4, Nr=nr, Ns=nr)
+    sim = cost_model.simulate_tiled_movement(p, Tb=tb, Tk=tk, Tc=1,
+                                             Th=th, Tw=tw)
+    analytic = cost_model.cost_global_memory_exact(
+        p, Wb=p.Nb, Wk=p.Nk, Wc=p.Nc, Wh=p.Nh, Ww=p.Nw,
+        Tb=tb, Tk=tk, Th=th, Tw=tw)
+    assert sim == pytest.approx(analytic, rel=1e-9)
+
+
+def test_eq1_equals_eq3_single_partition():
+    p = resnet50_layers(8)["res4a_2b"]
+    c1 = cost_model.cost_sequential(p, Tb=2, Tk=64, Th=7, Tw=7)
+    c3 = cost_model.cost_global_memory_exact(
+        p, Wb=p.Nb, Wk=p.Nk, Wc=p.Nc, Wh=p.Nh, Ww=p.Nw,
+        Tb=2, Tk=64, Th=7, Tw=7)
+    assert c1 == pytest.approx(c3)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 64), st.floats(1e3, 1e8))
+def test_distributed_offset_identity(P, M):
+    """Paper claim: cost_D - cost == (|In| + |Ker|)/P for any choice."""
+    p = ConvProblem(Nb=32, Nk=64, Nc=64, Nh=14, Nw=14, Nr=3, Ns=3)
+    c = TileChoice(Wbhw=float(p.Nbhw), Wk=64.0, Wc=64.0, Tbhw=196.0, Tk=16.0)
+    cost = cost_model.cost_global_memory(p, c)
+    cost_d = cost_model.cost_distributed_total(p, P, c)
+    offset = (p.size_in() + p.size_ker()) / P
+    assert cost_d - cost == pytest.approx(offset, rel=1e-9)
+
+
+def test_ml_correction_bounds():
+    """M_L < M, and M_L -> M as stencil/stride -> 1x1 (K small)."""
+    p3 = ConvProblem(Nb=8, Nk=64, Nc=64, Nh=14, Nw=14, Nr=3, Ns=3)
+    p1 = ConvProblem.from_matmul(1568, 64, 64)
+    M = 1e6
+    assert cost_model.ml_from_m(p3, M) < M
+    assert cost_model.ml_from_m(p1, M) < M
+    assert cost_model.ml_from_m(p1, M) > cost_model.ml_from_m(p3, M)
+
+
+def test_footprint_constraint():
+    p = ConvProblem(Nb=8, Nk=64, Nc=64, Nh=14, Nw=14, Nr=3, Ns=3)
+    g = cost_model.tile_footprint(p, Tb=2, Tk=16, Tc=1, Th=7, Tw=7)
+    # exact: in=(7+2)(7+2)*2*1, out=7*7*2*16, ker=9*16*1
+    assert g == (9 * 9 * 2) + (49 * 32) + (9 * 16)
