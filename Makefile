@@ -1,0 +1,19 @@
+PY ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test fast-test dist-test demo bench
+
+test:  ## tier-1 verify (full suite, fail-fast)
+	$(PY) -m pytest -x -q
+
+fast-test:  ## everything except the 8-device subprocess tests
+	$(PY) -m pytest -q -m "not subprocess"
+
+dist-test:  ## only the distributed-algorithms suite
+	$(PY) -m pytest -q tests/test_dist.py tests/test_dist_units.py
+
+demo:  ## end-to-end distributed conv demo on 8 virtual devices
+	$(PY) examples/distributed_conv_demo.py
+
+bench:  ## dry-run benchmark suite
+	$(PY) benchmarks/run.py

@@ -35,6 +35,7 @@ from repro.core.grid import (
     ProcessorGrid,
     comm_volume,
     compare_algorithms,
+    grid_from_tuple,
     synthesize,
 )
 from repro.core.sharding_synthesis import (
@@ -51,7 +52,7 @@ __all__ = [
     "cost_distributed_total", "memory_distributed", "ml_from_m",
     "tile_footprint", "simulate_tiled_movement",
     "solve", "solve_closed_form", "brute_force", "table1_cost", "table2_cost",
-    "synthesize", "comm_volume", "compare_algorithms",
+    "synthesize", "comm_volume", "compare_algorithms", "grid_from_tuple",
     "synthesize_layer", "synthesize_model",
     "ALGO_2D", "ALGO_25D", "ALGO_3D",
 ]

@@ -100,6 +100,37 @@ def synthesize(p: ConvProblem, P: int, M: float, *,
                          algo=sol.algo, case=sol.case, solution=sol)
 
 
+def grid_from_tuple(p: ConvProblem, grid: Tuple[int, int, int, int, int],
+                    *, algo: str = "manual") -> ProcessorGrid:
+    """ProcessorGrid for an explicit ``(Pb, Ph, Pw, Pk, Pc)`` tuple.
+
+    Per-processor work is ``W_i = N_i / P_i`` with maximal tiles
+    ``T = W`` (single broadcast round), so :func:`comm_volume` on the
+    result reports the paper's Eq. 10 cost for that explicit grid rather
+    than for a solver-chosen tiling.  Validation here is the paper
+    model's per-axis divisibility only; the ``repro.dist`` runtime
+    imposes stricter sub-shard constraints (e.g. ``Nc % (Pc*Pk)``) and
+    checks them itself — use ``repro.dist.conv_comm_elems`` for the
+    runtime schedule's own wire accounting.
+    """
+    pb, ph, pw, pk, pc = grid
+    for extent, div, what in [(p.Nb, pb, "Nb % Pb"), (p.Nh, ph, "Nh % Ph"),
+                              (p.Nw, pw, "Nw % Pw"), (p.Nk, pk, "Nk % Pk"),
+                              (p.Nc, pc, "Nc % Pc")]:
+        if div <= 0 or extent % div:
+            raise ValueError(f"grid {grid} does not divide the problem: "
+                             f"{what} != 0 ({extent} % {div})")
+    P = pb * ph * pw * pk * pc
+    pbhw = pb * ph * pw
+    choice = cost_model.TileChoice(
+        Wbhw=p.Nbhw / pbhw, Wk=p.Nk / pk, Wc=p.Nc / pc,
+        Tbhw=p.Nbhw / pbhw, Tk=p.Nk / pk)
+    sol = Solution(case="manual", algo=algo, choice=choice,
+                   cost=float("nan"), M_L=float("nan"), P=P)
+    return ProcessorGrid(Pb=pb, Pk=pk, Pc=pc, Ph=ph, Pw=pw,
+                         algo=algo, case="manual", solution=sol)
+
+
 # --------------------------------------------------------------------------
 # Communication-volume accounting for a concrete grid (per processor)
 # --------------------------------------------------------------------------

@@ -1,0 +1,45 @@
+"""Distributed CNN/matmul algorithms (paper Secs. 2-3): the 2D-SUMMA /
+2.5D / 3D family on explicit processor grids, plus the supporting
+primitives — halo exchange, microbatch pipelining, compressed reductions.
+
+Grid tuple conventions:
+
+* conv:   ``(Pb, Ph, Pw, Pk, Pc)`` over mesh axes ``("b","h","w","k","c")``
+* matmul: ``(Pm, Pn, Pc)``         over mesh axes ``("m","n","c")``
+
+Importing this package also installs a version-tolerant ``jax.shard_map``
+alias on JAX builds that only export the experimental spelling.
+"""
+
+from repro.dist._compat import install_jax_alias, shard_map
+from repro.dist.collectives import (
+    SCHEDULES,
+    gather_axis,
+    make_mesh,
+    ring_all_gather,
+    ring_reduce,
+)
+from repro.dist.compress import compressed_psum, compressed_psum_tree
+from repro.dist.conv2d import (
+    conv2d_distributed,
+    conv_comm_elems,
+    make_conv_mesh,
+)
+from repro.dist.halo import halo_exchange_1d
+from repro.dist.matmul import (
+    make_matmul_mesh,
+    matmul_comm_elems,
+    matmul_distributed,
+)
+from repro.dist.pipeline import pipelined_apply
+
+install_jax_alias()
+
+__all__ = [
+    "SCHEDULES", "shard_map", "gather_axis", "ring_all_gather",
+    "ring_reduce", "make_mesh",
+    "conv2d_distributed", "make_conv_mesh", "conv_comm_elems",
+    "matmul_distributed", "make_matmul_mesh", "matmul_comm_elems",
+    "halo_exchange_1d", "pipelined_apply",
+    "compressed_psum", "compressed_psum_tree",
+]

@@ -1,0 +1,43 @@
+"""Version-tolerant ``shard_map`` for the installed JAX.
+
+The public ``jax.shard_map`` (with its ``check_vma`` kwarg) only exists in
+newer JAX releases; older ones ship ``jax.experimental.shard_map.shard_map``
+with the kwarg spelled ``check_rep``.  Everything in ``repro.dist`` goes
+through :func:`shard_map` below, which accepts either spelling and forwards
+whichever one the installed JAX understands.
+
+Importing ``repro.dist`` also installs the wrapper as ``jax.shard_map`` when
+the attribute is missing, so downstream code written against the modern
+top-level API (tests, demos, user scripts) runs unmodified on older JAX.
+"""
+
+from __future__ import annotations
+
+import inspect
+
+import jax
+
+try:  # modern JAX: top-level export
+    _shard_map = jax.shard_map  # type: ignore[attr-defined]
+except AttributeError:  # older JAX: experimental namespace
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_PARAMS = inspect.signature(_shard_map).parameters
+_CHECK_KW = "check_vma" if "check_vma" in _PARAMS else (
+    "check_rep" if "check_rep" in _PARAMS else None)
+
+
+def shard_map(f, mesh=None, in_specs=None, out_specs=None, *,
+              check_vma=None, check_rep=None, **kwargs):
+    """``jax.shard_map`` accepting both ``check_vma`` and ``check_rep``."""
+    check = check_vma if check_vma is not None else check_rep
+    if check is not None and _CHECK_KW is not None:
+        kwargs[_CHECK_KW] = check
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, **kwargs)
+
+
+def install_jax_alias() -> None:
+    """Expose the wrapper as ``jax.shard_map`` on JAX versions lacking it."""
+    if not hasattr(jax, "shard_map"):
+        jax.shard_map = shard_map

@@ -1,0 +1,86 @@
+"""Schedule-selectable gather primitives shared by the distributed ops.
+
+Two implementations of the same logical all-gather over a mesh axis:
+
+* ``"allgather"`` — one ``lax.all_gather`` collective (XLA picks the
+  algorithm; on most backends this is already a ring).
+* ``"ring"``      — explicit ring of ``g - 1`` neighbour ``ppermute`` steps,
+  the building block the paper's 2D-SUMMA/2.5D schedules pipeline compute
+  against.  Same wire volume (``shard * (g-1)``), but each step is an
+  independent neighbour message that the conv/matmul inner loops can overlap
+  with partial contractions.
+
+Both return the gathered array with shards concatenated in *global rank
+order* along ``dim``, so downstream slicing by source rank is
+position-stable.  Must be called inside ``shard_map``.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import Mesh
+
+SCHEDULES = ("allgather", "ring")
+
+
+def make_mesh(grid, axes) -> Mesh:
+    """Mesh over ``axes`` from a parallel tuple of per-axis extents,
+    filled with the first ``prod(grid)`` local devices."""
+    if len(grid) != len(axes):
+        raise ValueError(f"grid {grid} must have one extent per axis "
+                         f"{axes}")
+    n = math.prod(grid)
+    devs = jax.devices()
+    if n > len(devs):
+        raise ValueError(f"grid {grid} needs {n} devices, "
+                         f"have {len(devs)}")
+    return Mesh(np.array(devs[:n]).reshape(grid), axes)
+
+
+def ring_reduce(x, axis_name: str, body, init):
+    """Rotate shards of ``x`` around the ``axis_name`` ring and fold them:
+    ``acc = body(acc, src, shard)`` once per rank, where ``src`` is the
+    (traced) rank index whose shard has just arrived.  All ring
+    bookkeeping (neighbour permutation, source-rank tracking) lives here
+    so the pipelined conv/matmul schedules share one copy of it."""
+    g = lax.psum(1, axis_name)
+    me = lax.axis_index(axis_name)
+    perm = [(i, (i + 1) % g) for i in range(g)]
+    cur, acc = x, init
+    for step in range(g):
+        acc = body(acc, (me - step) % g, cur)
+        if step < g - 1:
+            cur = lax.ppermute(cur, axis_name, perm)
+    return acc
+
+
+def ring_all_gather(x, axis_name: str, *, dim: int):
+    """All-gather ``x`` over ``axis_name`` via a ``ppermute`` ring."""
+    g = lax.psum(1, axis_name)
+    if g == 1:
+        return x
+    chunk = x.shape[dim]
+    shape = list(x.shape)
+    shape[dim] = chunk * g
+
+    def place(acc, src, shard):
+        idx = [0] * len(shape)
+        idx[dim] = src * chunk
+        return lax.dynamic_update_slice(acc, shard, tuple(idx))
+
+    return ring_reduce(x, axis_name, place, jnp.zeros(shape, x.dtype))
+
+
+def gather_axis(x, axis_name: str, *, dim: int, schedule: str):
+    """Dispatch between the collective and ring gathers."""
+    if schedule not in SCHEDULES:
+        raise ValueError(f"schedule must be one of {SCHEDULES}, "
+                         f"got {schedule!r}")
+    if schedule == "ring":
+        return ring_all_gather(x, axis_name, dim=dim)
+    return lax.all_gather(x, axis_name, axis=dim, tiled=True)

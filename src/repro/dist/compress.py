@@ -1,0 +1,92 @@
+"""Compressed cross-device gradient reduction with error feedback.
+
+``compressed_psum`` lossily compresses the local gradient shard before the
+cross-device mean and carries the compression residual forward as an
+error-feedback accumulator (Karimireddy et al., "Error Feedback Fixes
+SignSGD", 2019): the residual is added to the next step's gradient before
+compressing, so the *accumulated* applied update converges to the true
+gradient sum even though each individual reduction is lossy.
+
+Two compressors, composable:
+
+* int8 uniform quantization (default): per-tensor symmetric scale
+  ``max|g|/127``; the wire format would be one s8 payload + one f32 scale
+  per tensor, a 4x volume reduction over f32.
+* top-k sparsification (``k_frac``): keep only the largest ``k_frac``
+  fraction of entries by magnitude; the rest go straight into the residual.
+
+The reduction itself is ``lax.pmean`` over ``axis_name``, so these functions
+must run inside ``shard_map``/``pmap`` with that axis bound (see
+``train/step.py`` which applies them on just the ``pod`` axis).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def _quantize_int8(v):
+    """Symmetric int8 round-trip; returns the dequantized value."""
+    scale = jnp.maximum(jnp.max(jnp.abs(v)), 1e-30) / 127.0
+    q = jnp.clip(jnp.round(v / scale), -127, 127)
+    return q * scale
+
+
+def _topk_mask(v, k_frac: float):
+    """1.0 at exactly the ``k`` largest-|v| positions (ties broken by
+    position, so magnitude-tied tensors still transmit only ``k``)."""
+    flat = jnp.abs(v).reshape(-1)
+    k = max(1, int(round(k_frac * flat.size)))
+    _, idx = lax.top_k(flat, k)
+    mask = jnp.zeros_like(flat).at[idx].set(1.0)
+    return mask.reshape(v.shape).astype(v.dtype)
+
+
+def compressed_psum(g, axis_name: str, err=None, *,
+                    k_frac: Optional[float] = None,
+                    quantize: bool = True) -> Tuple[Any, Any]:
+    """Mean-reduce ``g`` over ``axis_name`` through a lossy compressor.
+
+    Returns ``(reduced, new_err)`` where ``new_err`` is the local residual
+    (error-feedback state) to pass back in on the next step.  ``err=None``
+    means a zero accumulator.
+    """
+    acc = g if err is None else g + err
+    comp = acc
+    if k_frac is not None:
+        comp = comp * _topk_mask(comp, k_frac)
+    if quantize:
+        comp = _quantize_int8(comp)
+    new_err = acc - comp
+    out = lax.pmean(comp, axis_name)
+    return out, new_err
+
+
+def compressed_psum_tree(grads, axis_name: str, err=None, *,
+                         k_frac: Optional[float] = None,
+                         quantize: bool = True) -> Tuple[Any, Any]:
+    """Tree-structured :func:`compressed_psum` over every gradient leaf.
+
+    ``err`` is a matching pytree of residuals (or ``None`` for a fresh
+    zero state).  Returns ``(reduced_tree, new_err_tree)``.
+    """
+    if err is None:
+        err = jax.tree.map(jnp.zeros_like, grads)
+    if jax.tree.structure(err) != jax.tree.structure(grads):
+        raise ValueError(
+            f"error-feedback pytree structure {jax.tree.structure(err)} "
+            f"does not match grads {jax.tree.structure(grads)}")
+    # flatten/unflatten (not a tuple-leaf tree.map) so grads pytrees that
+    # themselves contain tuples are never confused with the result pairs
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(err)
+    outs = [compressed_psum(g, axis_name, e, k_frac=k_frac,
+                            quantize=quantize)
+            for g, e in zip(flat_g, flat_e)]
+    reduced = jax.tree.unflatten(treedef, [o[0] for o in outs])
+    new_err = jax.tree.unflatten(treedef, [o[1] for o in outs])
+    return reduced, new_err

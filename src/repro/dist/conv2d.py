@@ -1,0 +1,177 @@
+"""Distributed 2-D convolution on the paper's 5-axis processor grid.
+
+Grid tuple convention (everywhere in this repo): ``(Pb, Ph, Pw, Pk, Pc)``
+over mesh axes ``("b", "h", "w", "k", "c")`` — batch, image height, image
+width, output features, input features (contraction).
+
+Data placement (NCHW activations, OIHW kernels):
+
+* ``In  [N, C, H, W]``  sharded ``P("b", ("c", "k"), "h", "w")`` — the
+  contraction dim is sharded over c and *sub-sharded* over k, so the only
+  input collective is an all-gather over the k-axis;
+* ``Ker [K, C, kh, kw]`` sharded ``P("k", ("c", "b"), None, None)`` — its
+  contraction sub-shard is gathered over the b-axis (batch ranks hold
+  disjoint kernel slices, the conv analogue of SUMMA's stationary-C kernel
+  replication);
+* ``Out [N, K, H', W']`` sharded ``P("b", "k", "h", "w")``, produced by an
+  all-reduce over the c-axis.
+
+Spatial decomposition (``Ph``/``Pw > 1``) uses :func:`halo_exchange_1d`:
+each shard is extended by the stencil's ``lo``/``hi`` context rows from its
+mesh neighbours, with ppermute's zero fill providing SAME zero padding at
+the global image boundary — the single-rank case degenerates to plain zero
+padding, so padding and halo share one code path.
+
+``schedule="ring"`` is the paper's pipelined variant: the input's C-slabs
+rotate around the k-ring and each arriving slab is immediately contracted
+(local conv) against the matching kernel C-slice — the ring-pipelined
+c-slab reduction.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple, Union
+
+from jax import lax
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.dist._compat import shard_map
+from repro.dist.collectives import (SCHEDULES, gather_axis, make_mesh,
+                                    ring_reduce)
+from repro.dist.halo import halo_exchange_1d
+
+AXES = ("b", "h", "w", "k", "c")
+_DIMNUMS = ("NCHW", "OIHW", "NCHW")
+
+Padding = Union[str, Tuple[Tuple[int, int], Tuple[int, int]]]
+
+
+def make_conv_mesh(grid) -> Mesh:
+    """Mesh over ``("b", "h", "w", "k", "c")`` from ``(Pb,Ph,Pw,Pk,Pc)``."""
+    if len(grid) != 5:
+        raise ValueError(f"conv grid must be (Pb,Ph,Pw,Pk,Pc), got {grid}")
+    return make_mesh(grid, AXES)
+
+
+def _pad_amounts(size: int, k: int, s: int, pad) -> Tuple[int, int, int]:
+    """(lo, hi, out_size) for one spatial dim, XLA's SAME/VALID rules."""
+    if isinstance(pad, str):
+        if pad.upper() == "SAME":
+            out = -(-size // s)
+            total = max((out - 1) * s + k - size, 0)
+            return total // 2, total - total // 2, out
+        if pad.upper() == "VALID":
+            return 0, 0, (size - k) // s + 1
+        raise ValueError(f"unknown padding {pad!r}")
+    lo, hi = pad
+    return lo, hi, (size + lo + hi - k) // s + 1
+
+
+def _local_conv(xl, wl, *, sizes, stride, pads, schedule):
+    pb, ph, pw, pk, pc = (sizes[a] for a in AXES)
+    (lo_h, hi_h), (lo_w, hi_w) = pads
+    # halo (interior) / zero pad (global boundary) on the thin C sub-shard,
+    # before any gather so boundary traffic is minimal
+    xl = halo_exchange_1d(xl, "h", spatial_dim=2, lo=lo_h, hi=hi_h)
+    xl = halo_exchange_1d(xl, "w", spatial_dim=3, lo=lo_w, hi=hi_w)
+    # kernel contraction sub-shard gathered over the batch axis
+    wg = gather_axis(wl, "b", dim=1, schedule=schedule) if pb > 1 else wl
+    conv = functools.partial(
+        lax.conv_general_dilated, window_strides=stride, padding="VALID",
+        dimension_numbers=_DIMNUMS)
+    if pk == 1:
+        out = conv(xl, wg)
+    elif schedule == "ring":
+        # ring-pipelined c-slab reduction: In's C-slabs rotate around the
+        # k-ring; contract each against the matching kernel C-slice
+        csub = xl.shape[1]
+
+        def partial_conv(acc, src, slab):
+            wslab = lax.dynamic_slice_in_dim(wg, src * csub, csub, axis=1)
+            part = conv(slab, wslab)
+            return part if acc is None else acc + part
+
+        out = ring_reduce(xl, "k", partial_conv, None)
+    else:
+        xg = gather_axis(xl, "k", dim=1, schedule=schedule)
+        out = conv(xg, wg)
+    if pc > 1:
+        out = lax.psum(out, "c")
+    return out
+
+
+def conv2d_distributed(x, w, mesh: Mesh, *, schedule: str = "allgather",
+                       stride: Union[int, Tuple[int, int]] = (1, 1),
+                       padding: Padding = "SAME"):
+    """NCHW x OIHW convolution distributed over a 5-axis grid; numerically
+    matches ``lax.conv_general_dilated(x, w, stride, padding)``."""
+    if schedule not in SCHEDULES:
+        raise ValueError(f"schedule must be one of {SCHEDULES}")
+    sizes = dict(mesh.shape)
+    missing = [a for a in AXES if a not in sizes]
+    if missing:
+        raise ValueError(f"mesh lacks axes {missing}; use make_conv_mesh")
+    if isinstance(stride, int):
+        stride = (stride, stride)
+    N, C, H, W = x.shape
+    K, C2, kh, kw = w.shape
+    pb, ph, pw, pk, pc = (sizes[a] for a in AXES)
+    if C != C2:
+        raise ValueError(f"channel mismatch: x {x.shape} vs w {w.shape}")
+    pad_spec = (padding, padding) if isinstance(padding, str) else padding
+    lo_h, hi_h, out_h = _pad_amounts(H, kh, stride[0], pad_spec[0])
+    lo_w, hi_w, out_w = _pad_amounts(W, kw, stride[1], pad_spec[1])
+    for extent, div, what in [
+            (N, pb, "N % Pb"), (H, ph, "H % Ph"), (W, pw, "W % Pw"),
+            (K, pk, "K % Pk"), (C, pc * pk, "C % (Pc*Pk)"),
+            (C, pc * pb, "C % (Pc*Pb)")]:
+        if div <= 0 or extent % div:
+            raise ValueError(f"shape not divisible by grid: {what} != 0 "
+                             f"({extent} % {div})")
+    for p_sp, st, lo, hi, k, dim in [(ph, stride[0], lo_h, hi_h, kh, "h"),
+                                     (pw, stride[1], lo_w, hi_w, kw, "w")]:
+        if p_sp > 1 and (st != 1 or lo + hi != k - 1):
+            raise NotImplementedError(
+                f"spatial sharding over '{dim}' needs stride 1 with "
+                f"SAME-style padding (lo+hi == k-1); got stride={st}, "
+                f"pad=({lo},{hi}), k={k}")
+    fn = shard_map(
+        functools.partial(_local_conv, sizes=sizes, stride=stride,
+                          pads=((lo_h, hi_h), (lo_w, hi_w)),
+                          schedule=schedule),
+        mesh=mesh,
+        in_specs=(P("b", ("c", "k"), "h", "w"),
+                  P("k", ("c", "b"), None, None)),
+        out_specs=P("b", "k", "h", "w"),
+        check_rep=False)
+    return fn(x, w)
+
+
+def conv_comm_elems(x_shape, w_shape, grid, *, stride=(1, 1),
+                    padding: Padding = "SAME") -> dict:
+    """Analytic per-device communication (elements) of the schedule above:
+    gather In over k, gather Ker over b, all-reduce Out over c, plus the
+    spatial halo — the runtime counterpart of ``core.grid.comm_volume``."""
+    if isinstance(stride, int):
+        stride = (stride, stride)
+    N, C, H, W = x_shape
+    K, _, kh, kw = w_shape
+    pb, ph, pw, pk, pc = grid
+    pad_spec = (padding, padding) if isinstance(padding, str) else padding
+    lo_h, hi_h, out_h = _pad_amounts(H, kh, stride[0], pad_spec[0])
+    lo_w, hi_w, out_w = _pad_amounts(W, kw, stride[1], pad_spec[1])
+    hl, wl = H // ph + lo_h + hi_h, W // pw + lo_w + hi_w
+    csub_in = C / (pc * pk)
+    gather_in = (N / pb) * csub_in * hl * wl * (pk - 1)
+    gather_ker = K / pk * (C / (pc * pb)) * kh * kw * (pb - 1)
+    reduce_out = 2 * (N / pb) * (K / pk) * (out_h / ph) * (out_w / pw) \
+        * (pc - 1) / pc
+    halo = 0.0
+    if ph > 1:
+        halo += (lo_h + hi_h) * (N / pb) * csub_in * (W // pw)
+    if pw > 1:
+        halo += (lo_w + hi_w) * (N / pb) * csub_in * hl
+    return {"gather_in": gather_in, "gather_ker": gather_ker,
+            "reduce_out": reduce_out, "halo": halo,
+            "total": gather_in + gather_ker + reduce_out + halo}

@@ -1,0 +1,76 @@
+"""Halo exchange for spatially partitioned convolutions (paper Sec. 3.2).
+
+When the h/w image dimensions are split over processors, each processor
+needs ``lo`` boundary rows from its predecessor and ``hi`` rows from its
+successor along the mesh axis to evaluate the stencil.  The exchange is a
+pair of ``lax.ppermute`` neighbour pushes; ranks at the global boundary
+receive zeros (ppermute's fill value), which is exactly SAME-style zero
+padding — so the single-rank degenerate case reduces to plain zero padding
+and the caller never special-cases it.
+
+Shards smaller than the halo are handled by multi-hop permutes: hop ``j``
+fetches the block ``j`` ranks away, and the concatenated strip is sliced to
+the requested width.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def _strip_from_prev(x, axis_name: str, dim: int, lo: int, n: int):
+    """Last ``lo`` rows of the concatenation of all preceding shards,
+    zero-extended past the global lower boundary.  Each hop permutes only
+    the rows it contributes to the strip, not the whole shard."""
+    size = x.shape[dim]
+    hops = -(-lo // size)  # ceil
+    blocks = []
+    for hop in range(hops, 0, -1):  # farthest neighbour first
+        take = min(size, lo - (hop - 1) * size)
+        src = lax.slice_in_dim(x, size - take, size, axis=dim)
+        perm = [(i, i + hop) for i in range(n - hop)]
+        blocks.append(lax.ppermute(src, axis_name, perm) if perm
+                      else jnp.zeros_like(src))
+    return blocks[0] if len(blocks) == 1 \
+        else jnp.concatenate(blocks, axis=dim)
+
+
+def _strip_from_next(x, axis_name: str, dim: int, hi: int, n: int):
+    """First ``hi`` rows of the concatenation of all following shards,
+    zero-extended past the global upper boundary.  Each hop permutes only
+    the rows it contributes to the strip, not the whole shard."""
+    size = x.shape[dim]
+    hops = -(-hi // size)
+    blocks = []
+    for hop in range(1, hops + 1):  # nearest neighbour first
+        take = min(size, hi - (hop - 1) * size)
+        src = lax.slice_in_dim(x, 0, take, axis=dim)
+        perm = [(i, i - hop) for i in range(hop, n)]
+        blocks.append(lax.ppermute(src, axis_name, perm) if perm
+                      else jnp.zeros_like(src))
+    return blocks[0] if len(blocks) == 1 \
+        else jnp.concatenate(blocks, axis=dim)
+
+
+def halo_exchange_1d(x, axis_name: str, *, spatial_dim: int,
+                     lo: int, hi: int):
+    """Extend the local shard by ``lo``/``hi`` halo rows along
+    ``spatial_dim``, filled from the neighbouring shards on mesh axis
+    ``axis_name`` (zeros beyond the global array boundary).
+
+    Must be called inside ``shard_map``.  Returns an array whose
+    ``spatial_dim`` extent is ``x.shape[spatial_dim] + lo + hi``.
+    """
+    if lo < 0 or hi < 0:
+        raise ValueError(f"halo widths must be >= 0, got lo={lo} hi={hi}")
+    if lo == 0 and hi == 0:
+        return x
+    n = lax.psum(1, axis_name)  # static axis size
+    parts = []
+    if lo > 0:
+        parts.append(_strip_from_prev(x, axis_name, spatial_dim, lo, n))
+    parts.append(x)
+    if hi > 0:
+        parts.append(_strip_from_next(x, axis_name, spatial_dim, hi, n))
+    return jnp.concatenate(parts, axis=spatial_dim)

@@ -1,0 +1,68 @@
+"""Microbatch pipeline parallelism over a mesh axis (GPipe schedule).
+
+Stage ``s`` of the network lives on rank ``s`` of the pipeline axis (stage
+parameters are sharded on their leading dimension).  Microbatches are fed
+into stage 0 one per tick; activations hop to the next rank with a single
+neighbour ``ppermute`` per tick, so after the ``S - 1``-tick fill phase the
+pipe is full and every rank computes every tick.  Total ticks:
+``n_micro + S - 1``.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.dist._compat import shard_map
+from jax.sharding import PartitionSpec as P
+
+
+def pipelined_apply(stage_fn: Callable[[Any, Any], Any], params, x, mesh,
+                    *, axis: str = "pod"):
+    """Run ``x`` through ``S = mesh.shape[axis]`` stages of ``stage_fn``.
+
+    ``params``: pytree whose leaves have a leading stage dimension ``S``
+    (rank ``s`` consumes slice ``s``).  ``x``: ``[n_micro, mb, ...]``
+    microbatched input, replicated.  Returns the final-stage output
+    ``[n_micro, mb, ...]`` replicated across the axis.
+
+    ``stage_fn(stage_params, h) -> h`` must map activations to activations
+    of the same shape (each stage's output feeds the next stage).
+    """
+    n_stages = mesh.shape[axis]
+    n_micro = x.shape[0]
+    for path, leaf in jax.tree_util.tree_leaves_with_path(params):
+        if leaf.shape[:1] != (n_stages,):
+            raise ValueError(
+                f"param leaf {jax.tree_util.keystr(path)} has leading dim "
+                f"{leaf.shape[:1]}, expected ({n_stages},) = mesh.shape"
+                f"[{axis!r}] (one slice per pipeline stage)")
+    fwd = [(i, i + 1) for i in range(n_stages - 1)]
+
+    def local(p_local, x_all):
+        s = lax.axis_index(axis)
+        p_here = jax.tree.map(lambda a: a[0], p_local)  # drop stage dim
+        is_first = (s == 0)
+        is_last = (s == n_stages - 1)
+        recv = jnp.zeros_like(x_all[0])
+        acc = jnp.zeros_like(x_all)
+        for t in range(n_micro + n_stages - 1):
+            feed = x_all[t] if t < n_micro else jnp.zeros_like(x_all[0])
+            h_in = jnp.where(is_first, feed, recv)
+            h_out = stage_fn(p_here, h_in)
+            m = t - (n_stages - 1)  # microbatch index leaving the pipe
+            if 0 <= m < n_micro:
+                acc = acc.at[m].set(jnp.where(is_last, h_out, 0.0))
+            if fwd and t < n_micro + n_stages - 2:
+                recv = lax.ppermute(h_out, axis, fwd)
+        # only the last stage holds real outputs; psum replicates them
+        return lax.psum(acc, axis)
+
+    spec_tree = jax.tree.map(lambda _: P(axis), params)
+    fn = shard_map(local, mesh=mesh,
+                   in_specs=(spec_tree, P()), out_specs=P(),
+                   check_rep=False)
+    return fn(params, x)

@@ -1,0 +1,28 @@
+"""Shared test helpers: JAX-version tolerance shims.
+
+``jax.sharding.AbstractMesh`` changed its constructor across JAX releases
+(older: a ``shape_tuple`` of ``(name, size)`` pairs; newer: positional
+``axis_sizes, axis_names``).  Tests build abstract meshes through
+:func:`make_abstract_mesh` so they run on either signature.
+"""
+
+import jax
+import pytest
+
+
+def make_abstract_mesh(shape=(16, 16), axes=("data", "model")):
+    """AbstractMesh from parallel axis-size and axis-name tuples, on any
+    installed JAX."""
+    try:  # newer JAX: AbstractMesh(axis_sizes, axis_names)
+        return jax.sharding.AbstractMesh(tuple(shape), tuple(axes))
+    except TypeError:  # older JAX: AbstractMesh(((name, size), ...))
+        return jax.sharding.AbstractMesh(tuple(zip(axes, shape)))
+
+
+@pytest.fixture
+def fake_mesh():
+    """Factory fixture (works under any pytest import mode, unlike a
+    ``from conftest import ...`` in a test module): lets tests build
+    specs for the production mesh without 512 devices — tests run
+    single-device per the dry-run contract."""
+    return make_abstract_mesh

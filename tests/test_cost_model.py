@@ -4,6 +4,7 @@ distributed-cost offset identity from Sec. 2.2."""
 import math
 
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import cost_model

@@ -9,6 +9,8 @@ import textwrap
 
 import pytest
 
+pytestmark = pytest.mark.subprocess  # deselect with -m "not subprocess"
+
 _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 

@@ -14,10 +14,8 @@ from repro.models.api import model_fns
 from repro.parallel import sharding as shd
 
 
-def fake_mesh(shape=(16, 16), axes=("data", "model")):
-    """AbstractMesh: lets us build specs for the production mesh without
-    512 devices (tests run single-device per the dry-run contract)."""
-    return jax.sharding.AbstractMesh(shape, axes)
+# fake_mesh is the version-tolerant AbstractMesh factory fixture from
+# conftest.py (tests run single-device per the dry-run contract).
 
 
 def test_synthesize_layer_prefers_dp_for_activation_heavy():
@@ -48,7 +46,7 @@ def test_decide_serve_prefers_tp():
     assert w in ("k", "c")
 
 
-def test_param_specs_cover_all_leaves_and_divide():
+def test_param_specs_cover_all_leaves_and_divide(fake_mesh):
     mesh = fake_mesh()
     for arch in ["llama3.2-1b", "qwen3-moe-235b-a22b", "zamba2-7b",
                  "whisper-tiny", "xlstm-350m"]:
@@ -71,7 +69,7 @@ def test_param_specs_cover_all_leaves_and_divide():
                 assert leaf.shape[dim] % size == 0, (leaf.shape, spec)
 
 
-def test_param_specs_shard_moe_experts():
+def test_param_specs_shard_moe_experts(fake_mesh):
     mesh = fake_mesh()
     cfg = get_config("qwen3-moe-235b-a22b")
     fns = model_fns(cfg)
@@ -82,7 +80,7 @@ def test_param_specs_shard_moe_experts():
     assert specs["blocks"]["moe"]["w_up"][1] == "model"   # EP on expert dim
 
 
-def test_vocab_fallback_for_non_divisible():
+def test_vocab_fallback_for_non_divisible(fake_mesh):
     mesh = fake_mesh()
     cfg = get_config("whisper-tiny")   # vocab 51865, not divisible by 16
     fns = model_fns(cfg)
@@ -92,7 +90,7 @@ def test_vocab_fallback_for_non_divisible():
     assert specs["emb"]["lm_head"] == P("model", None)  # d-dim fallback
 
 
-def test_batch_and_cache_specs():
+def test_batch_and_cache_specs(fake_mesh):
     mesh = fake_mesh((2, 16, 16), ("pod", "data", "model"))
     cfg = get_config("llama3.2-1b")
     batch = {"tokens": jax.ShapeDtypeStruct((256, 4096), jnp.int32)}
@@ -105,7 +103,7 @@ def test_batch_and_cache_specs():
     assert cs["k"][1] == ("pod", "data")
 
 
-def test_batch_not_shardable_stays_replicated():
+def test_batch_not_shardable_stays_replicated(fake_mesh):
     mesh = fake_mesh()
     cfg = get_config("llama3.2-1b")
     batch = {"tokens": jax.ShapeDtypeStruct((1, 64), jnp.int32)}
