@@ -1,7 +1,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test fast-test dist-test demo bench
+.PHONY: test fast-test dist-test grad-test demo bench
 
 test:  ## tier-1 verify (full suite, fail-fast)
 	$(PY) -m pytest -x -q
@@ -11,6 +11,9 @@ fast-test:  ## everything except the 8-device subprocess tests
 
 dist-test:  ## only the distributed-algorithms suite
 	$(PY) -m pytest -q tests/test_dist.py tests/test_dist_units.py
+
+grad-test:  ## distributed-op VJP / gradient checks (incl. 8-device grids)
+	$(PY) -m pytest -q -m grad
 
 demo:  ## end-to-end distributed conv demo on 8 virtual devices
 	$(PY) examples/distributed_conv_demo.py

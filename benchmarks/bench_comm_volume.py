@@ -1,7 +1,9 @@
 """The paper's central comparison (Sec. 2.2 cost analysis): communication
 volume of the 2D / 2.5D / 3D distributed CNN algorithms — analytic cost_C
 + cost_I vs collective wire bytes measured from compiled HLO on 8 virtual
-devices (subprocess; the bench process keeps 1 device).
+devices (subprocess; the bench process keeps 1 device).  Also measures the
+fwd+bwd train-step volume through the dist-op custom VJPs against the
+transposed-schedule accounting (``conv_train_comm_elems``).
 """
 
 from __future__ import annotations
@@ -22,7 +24,8 @@ import jax, jax.numpy as jnp
 from repro.core import ConvProblem, comm_volume, synthesize
 from repro.core.grid import ProcessorGrid
 from repro.core.tile_optimizer import solve
-from repro.dist.conv2d import conv2d_distributed, make_conv_mesh
+from repro.dist.conv2d import (conv2d_distributed, conv_train_comm_elems,
+                               make_conv_mesh)
 from repro.launch.hlo_analysis import analyze_hlo
 
 N, C, H, W, K, kh = 8, 32, 16, 16, 32, 3
@@ -41,6 +44,17 @@ for grid, algo in [((8,1,1,1,1), "2D-DP"), ((4,1,1,2,1), "2D-SUMMA"),
         out.append({"grid": grid, "algo": algo, "sched": sched,
                     "wire_bytes": rep["total_wire_bytes"],
                     "counts": rep["coll_counts"]})
+    # fwd+bwd through the custom VJP vs the transposed-schedule accounting
+    def fwd_bwd(a, b):
+        y, vjp = jax.vjp(lambda p, q: conv2d_distributed(p, q, mesh), a, b)
+        return vjp(y)
+    rep = analyze_hlo(jax.jit(fwd_bwd).lower(x, w).compile().as_text())
+    analytic = (conv_train_comm_elems((N,C,H,W), (K,C,kh,kh), grid)["total"]
+                * prob.bytes_per_elem)
+    out.append({"grid": grid, "algo": algo, "sched": "fwd+bwd",
+                "wire_bytes": rep["total_wire_bytes"],
+                "analytic_bytes": analytic,
+                "counts": rep["coll_counts"]})
 print("JSON" + json.dumps(out))
 """
 
@@ -57,8 +71,10 @@ def run() -> list:
                if l.startswith("JSON")][0][4:]
     rows = []
     for rec in json.loads(payload):
+        extra = (f"analytic {rec['analytic_bytes']:.3e}B"
+                 if "analytic_bytes" in rec else "")
         rows.append((f"comm/{rec['algo']}/{rec['sched']}",
                      f"{rec['wire_bytes']:.3e}B",
                      str(rec["grid"]),
-                     "", ""))
+                     extra, ""))
     return rows

@@ -7,9 +7,11 @@ Algorithms for Convolutional Neural Networks", SPAA '21.
 from repro.core.problem import ConvProblem, resnet50_layers
 from repro.core.cost_model import (
     TileChoice,
+    cost_distributed_bwd,
     cost_distributed_comm,
     cost_distributed_init,
     cost_distributed_total,
+    cost_distributed_train,
     cost_global_memory,
     cost_global_memory_exact,
     cost_sequential,
@@ -39,7 +41,9 @@ from repro.core.grid import (
     synthesize,
 )
 from repro.core.sharding_synthesis import (
+    DistGridChoice,
     LayerSharding,
+    synthesize_dist_grid,
     synthesize_layer,
     synthesize_model,
 )
@@ -49,10 +53,12 @@ __all__ = [
     "ProcessorGrid", "CommVolume", "LayerSharding",
     "cost_sequential", "cost_global_memory", "cost_global_memory_exact",
     "cost_simplified", "cost_distributed_init", "cost_distributed_comm",
-    "cost_distributed_total", "memory_distributed", "ml_from_m",
+    "cost_distributed_total", "cost_distributed_bwd",
+    "cost_distributed_train", "memory_distributed", "ml_from_m",
     "tile_footprint", "simulate_tiled_movement",
     "solve", "solve_closed_form", "brute_force", "table1_cost", "table2_cost",
     "synthesize", "comm_volume", "compare_algorithms", "grid_from_tuple",
     "synthesize_layer", "synthesize_model",
+    "DistGridChoice", "synthesize_dist_grid",
     "ALGO_2D", "ALGO_25D", "ALGO_3D",
 ]

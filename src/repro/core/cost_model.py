@@ -179,6 +179,36 @@ def cost_distributed_total(p: ConvProblem, P: int, c: TileChoice) -> float:
     return cost_distributed_init(p, P, c) + cost_distributed_comm(p, c)
 
 
+def cost_distributed_bwd(p: ConvProblem, c: TileChoice) -> float:
+    """Compute-phase communication of the backward passes (dIn + dKer).
+
+    Both gradient passes reuse the forward grid (Demmel & Dinh 2018 /
+    Chen et al. 2022 derive their bounds for the combined computation):
+    dIn re-broadcasts Ker and reduce-scatters the In gradient (volume of
+    the In broadcast it transposes); dKer re-broadcasts In and
+    reduce-scatters the Ker gradient (volume of the Ker broadcast).  The
+    Out all-reduce transposes to a broadcast of the already replicated
+    cotangent — free.  Hence cost_C_bwd = 2 * cost_C_fwd.
+    """
+    return 2.0 * cost_distributed_comm(p, c)
+
+
+def cost_distributed_train(p: ConvProblem, P: int, c: TileChoice) -> float:
+    """Eq. 10 extended to a full training step: initial distribution +
+    forward compute-phase communication + both backward passes,
+
+        cost_T = cost_I + 3 * cost_C.
+
+    This is the objective the dist-grid synthesizer
+    (``core.sharding_synthesis.synthesize_dist_grid``) minimizes; the
+    runtime counterpart with exact halo / sub-shard terms is
+    ``repro.dist.conv_train_comm_elems``.
+    """
+    return (cost_distributed_init(p, P, c)
+            + cost_distributed_comm(p, c)
+            + cost_distributed_bwd(p, c))
+
+
 def memory_distributed(p: ConvProblem, P: int, c: TileChoice) -> float:
     """Paper Eq. 11 g_D: tile buffers + resident initial distribution."""
     # Tile working buffers (In tile with halo + Ker tile).  Composite form.

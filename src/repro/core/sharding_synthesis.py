@@ -15,6 +15,14 @@ resulting factorization minimizes the paper's Eq. 3 cost, then emits
 This is the paper's technique operating as a per-layer sharding synthesizer
 for every architecture in the framework: a transformer matmul is the
 degenerate CNN and lands in exactly the same machinery.
+
+Besides PartitionSpecs (:func:`synthesize_layer`, GSPMD execution), the
+synthesizer also emits explicit ``(Pb, Ph, Pw, Pk, Pc)`` grids for the
+``repro.dist`` runtime (:func:`synthesize_dist_grid`): it enumerates every
+factorization of the device count over the five conv axes that satisfies
+the runtime's sub-shard divisibility constraints and minimizes the
+fwd+bwd training cost (``cost_model.cost_distributed_train``) — the grid a
+``dist/train.py`` train step should run on.
 """
 
 from __future__ import annotations
@@ -112,6 +120,97 @@ def synthesize_layer(p: ConvProblem, mesh_axes: Dict[str, int], M: float,
     if best is None:
         raise ValueError(
             f"no feasible mesh assignment for {p} on axes {mesh_axes}")
+    return best
+
+
+@dataclasses.dataclass(frozen=True)
+class DistGridChoice:
+    """An explicit runtime grid for ``repro.dist`` plus its cost story."""
+
+    grid: Tuple[int, int, int, int, int]   # (Pb, Ph, Pw, Pk, Pc)
+    algo: str                              # 2D / 2.5D / 3D analogue
+    model_cost: float                      # cost_model objective (elements)
+    comm_elems: Dict                       # runtime wire accounting
+
+
+def _algo_family(grid: Tuple[int, int, int, int, int]) -> str:
+    pb, ph, pw, pk, pc = grid
+    pbhw = pb * ph * pw
+    if pc == 1:
+        return "2D-SUMMA" if pk > 1 else "2D-DP"
+    if pk > 1 and pbhw > 1:
+        return "3D" if max(pbhw, pk, pc) <= 2 * min(pbhw, pk, pc) \
+            else "2.5D"
+    return "2.5D"
+
+
+def _factorizations(P: int, axes: int):
+    """All tuples of ``axes`` positive ints with product ``P``."""
+    if axes == 1:
+        yield (P,)
+        return
+    for d in range(1, P + 1):
+        if P % d == 0:
+            for rest in _factorizations(P // d, axes - 1):
+                yield (d,) + rest
+
+
+def synthesize_dist_grid(x_shape, w_shape, n_devices: int, *,
+                         stride=(1, 1), padding="SAME",
+                         train: bool = True) -> DistGridChoice:
+    """Choose the ``(Pb, Ph, Pw, Pk, Pc)`` grid for ``repro.dist``.
+
+    Enumerates every factorization of ``n_devices`` over the five conv
+    axes, keeps those satisfying the runtime divisibility constraints
+    (``N % Pb``, spatial in/out extents % Ph/Pw, ``K % Pk``,
+    ``C % (Pc*Pk)``, ``C % (Pc*Pb)``), and minimizes the paper's
+    distributed cost — ``cost_distributed_train`` (fwd + dIn + dKer) when
+    ``train`` else ``cost_distributed_total`` — with the runtime
+    ``conv_train_comm_elems`` total as tie-break.
+    """
+    from repro.core.grid import grid_from_tuple
+    from repro.dist.conv2d import (_pad_amounts, conv_comm_elems,
+                                   conv_grid_divides,
+                                   conv_train_comm_elems)
+
+    if isinstance(stride, int):
+        stride = (stride, stride)
+    N, C, H, W = x_shape
+    K, C2, kh, kw = w_shape
+    if C != C2:
+        raise ValueError(f"channel mismatch: {x_shape} vs {w_shape}")
+    pad_spec = (padding, padding) if isinstance(padding, str) else padding
+    _, _, out_h = _pad_amounts(H, kh, stride[0], pad_spec[0])
+    _, _, out_w = _pad_amounts(W, kw, stride[1], pad_spec[1])
+    p = ConvProblem(Nb=N, Nk=K, Nc=C, Nh=out_h, Nw=out_w, Nr=kh, Ns=kw,
+                    sh=stride[0], sw=stride[1])
+
+    best: Optional[DistGridChoice] = None
+    best_key = None
+    for grid in _factorizations(n_devices, 5):
+        if not conv_grid_divides(x_shape, w_shape, grid, stride=stride,
+                                 padding=padding):
+            continue
+        choice = grid_from_tuple(p, grid).solution.choice
+        if train:
+            model_cost = cost_model.cost_distributed_train(
+                p, n_devices, choice)
+            elems = conv_train_comm_elems(x_shape, w_shape, grid,
+                                          stride=stride, padding=padding)
+        else:
+            model_cost = cost_model.cost_distributed_total(
+                p, n_devices, choice)
+            elems = conv_comm_elems(x_shape, w_shape, grid, stride=stride,
+                                    padding=padding)
+        key = (model_cost, elems["total"], grid)
+        if best_key is None or key < best_key:
+            best_key = key
+            best = DistGridChoice(grid=grid, algo=_algo_family(grid),
+                                  model_cost=model_cost, comm_elems=elems)
+    if best is None:
+        raise ValueError(
+            f"no (Pb,Ph,Pw,Pk,Pc) factorization of {n_devices} devices "
+            f"divides conv x{tuple(x_shape)} w{tuple(w_shape)}")
     return best
 
 

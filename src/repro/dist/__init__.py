@@ -7,6 +7,13 @@ Grid tuple conventions:
 * conv:   ``(Pb, Ph, Pw, Pk, Pc)`` over mesh axes ``("b","h","w","k","c")``
 * matmul: ``(Pm, Pn, Pc)``         over mesh axes ``("m","n","c")``
 
+Every op is differentiable: ``conv2d_distributed``, ``matmul_distributed``,
+``halo_exchange_1d`` and ``pipelined_apply`` carry custom VJPs whose
+backward passes transpose the forward communication structure (gathers to
+reduce-scatters, the c-axis all-reduce to a broadcast, halo exchange to
+halo accumulation), so ``jax.grad`` of a model built on them runs the
+paper's fwd+bwd schedule end to end (see ``dist/train.py``).
+
 Importing this package also installs a version-tolerant ``jax.shard_map``
 alias on JAX builds that only export the experimental spelling.
 """
@@ -18,28 +25,54 @@ from repro.dist.collectives import (
     make_mesh,
     ring_all_gather,
     ring_reduce,
+    ring_reduce_scatter,
+    scatter_axis,
 )
 from repro.dist.compress import compressed_psum, compressed_psum_tree
 from repro.dist.conv2d import (
     conv2d_distributed,
     conv_comm_elems,
+    conv_grid_divides,
+    conv_train_comm_elems,
     make_conv_mesh,
 )
-from repro.dist.halo import halo_exchange_1d
+from repro.dist.halo import halo_accumulate_1d, halo_exchange_1d
 from repro.dist.matmul import (
     make_matmul_mesh,
     matmul_comm_elems,
     matmul_distributed,
+    matmul_grid_divides,
+    matmul_mesh_from_conv,
+    matmul_train_comm_elems,
 )
 from repro.dist.pipeline import pipelined_apply
 
 install_jax_alias()
 
+# dist.train sits above the model/optimizer stack (it imports models.cnn
+# and train.step, which themselves import repro.dist lazily); re-export it
+# lazily so importing the primitives package neither pulls in the whole
+# training stack nor risks a circular import.
+_TRAIN_EXPORTS = ("make_grid_train_step", "init_grid_train_state",
+                  "cnn_train_comm_elems", "grid_divides_cnn")
+
+
+def __getattr__(name):
+    if name in _TRAIN_EXPORTS:
+        from repro.dist import train as _train
+        return getattr(_train, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
 __all__ = [
     "SCHEDULES", "shard_map", "gather_axis", "ring_all_gather",
-    "ring_reduce", "make_mesh",
+    "ring_reduce", "ring_reduce_scatter", "scatter_axis", "make_mesh",
     "conv2d_distributed", "make_conv_mesh", "conv_comm_elems",
+    "conv_train_comm_elems", "conv_grid_divides",
     "matmul_distributed", "make_matmul_mesh", "matmul_comm_elems",
-    "halo_exchange_1d", "pipelined_apply",
+    "matmul_train_comm_elems", "matmul_grid_divides",
+    "matmul_mesh_from_conv",
+    "halo_exchange_1d", "halo_accumulate_1d", "pipelined_apply",
     "compressed_psum", "compressed_psum_tree",
+    "make_grid_train_step", "init_grid_train_state",
+    "cnn_train_comm_elems", "grid_divides_cnn",
 ]

@@ -84,3 +84,44 @@ def gather_axis(x, axis_name: str, *, dim: int, schedule: str):
     if schedule == "ring":
         return ring_all_gather(x, axis_name, dim=dim)
     return lax.all_gather(x, axis_name, axis=dim, tiled=True)
+
+
+def ring_reduce_scatter(x, axis_name: str, *, dim: int):
+    """Reduce-scatter ``x`` over ``axis_name`` via a ``ppermute`` ring.
+
+    Chunk ``r`` of the result (rank order along ``dim``) ends on rank ``r``
+    holding ``sum_j chunk_r(x_j)`` — the exact transpose of
+    :func:`ring_all_gather`.  Token ``T_r`` starts on rank ``r+1`` and
+    travels the full ring, accumulating every rank's ``chunk_r`` on the
+    way; wire volume is ``chunk * (g - 1)`` per device, the same as the
+    gather it transposes.
+    """
+    g = lax.psum(1, axis_name)
+    if g == 1:
+        return x
+    if x.shape[dim] % g:
+        raise ValueError(f"reduce-scatter dim {dim} of extent "
+                         f"{x.shape[dim]} not divisible by axis size {g}")
+    chunk = x.shape[dim] // g
+    me = lax.axis_index(axis_name)
+    perm = [(i, (i + 1) % g) for i in range(g)]
+
+    def take(r):
+        return lax.dynamic_slice_in_dim(x, r * chunk, chunk, axis=dim)
+
+    cur = take((me - 1) % g)
+    for t in range(1, g):
+        cur = lax.ppermute(cur, axis_name, perm)
+        cur = cur + take((me - 1 - t) % g)
+    return cur
+
+
+def scatter_axis(x, axis_name: str, *, dim: int, schedule: str):
+    """Reduce-scatter over a mesh axis — the transpose of :func:`gather_axis`
+    (rank-ordered chunks along ``dim``), schedule-dispatched the same way."""
+    if schedule not in SCHEDULES:
+        raise ValueError(f"schedule must be one of {SCHEDULES}, "
+                         f"got {schedule!r}")
+    if schedule == "ring":
+        return ring_reduce_scatter(x, axis_name, dim=dim)
+    return lax.psum_scatter(x, axis_name, scatter_dimension=dim, tiled=True)

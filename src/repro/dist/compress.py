@@ -10,14 +10,26 @@ gradient sum even though each individual reduction is lossy.
 Two compressors, composable:
 
 * int8 uniform quantization (default): per-tensor symmetric scale
-  ``max|g|/127``; the wire format would be one s8 payload + one f32 scale
-  per tensor, a 4x volume reduction over f32.
+  ``max|g|/127``; the wire format is one s8 payload + one f32 scale per
+  tensor, a 4x byte reduction over the f32 payload.
 * top-k sparsification (``k_frac``): keep only the largest ``k_frac``
   fraction of entries by magnitude; the rest go straight into the residual.
 
-The reduction itself is ``lax.pmean`` over ``axis_name``, so these functions
-must run inside ``shard_map``/``pmap`` with that axis bound (see
-``train/step.py`` which applies them on just the ``pod`` axis).
+With ``wire="s8"`` (the default when quantizing) the reduction really
+transmits int8: the s8 payload and per-device f32 scales are all-gathered
+over ``axis_name`` and the mean is taken locally after dequantization —
+the HLO contains an ``s8[...]`` all-gather, so the byte saving shows up in
+measured wire traffic, not just the model.  Ring accounting: the s8
+gather moves ``n*(g-1)`` bytes per device vs ``8n*(g-1)/g`` for the f32
+all-reduce — a factor-``8/g`` saving that breaks even at ``g = 8``, so
+for axis sizes >= 8 the s8 path automatically degrades to the f32
+all-reduce (compression then only buys the quantized numerics, not
+wire).  ``wire="f32"`` forces the old model-only behaviour (``lax.pmean``
+of the dequantized tensor); the two paths compute the same mean up to
+floating-point reduction order (they transmit identical quantized
+values).  These functions must run inside ``shard_map``/``pmap`` with
+``axis_name`` bound (see ``train/step.py`` which applies them on just the
+``pod`` axis).
 """
 
 from __future__ import annotations
@@ -29,11 +41,20 @@ import jax.numpy as jnp
 from jax import lax
 
 
-def _quantize_int8(v):
-    """Symmetric int8 round-trip; returns the dequantized value."""
+WIRE_FORMATS = ("s8", "f32")
+
+
+def _quantize_parts(v):
+    """Symmetric int8 quantization; returns the s8 payload + f32 scale."""
     scale = jnp.maximum(jnp.max(jnp.abs(v)), 1e-30) / 127.0
-    q = jnp.clip(jnp.round(v / scale), -127, 127)
-    return q * scale
+    q = jnp.clip(jnp.round(v / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def _quantize_int8(v):
+    """Symmetric int8 round-trip; returns the dequantized value (v.dtype)."""
+    q, scale = _quantize_parts(v)
+    return (q.astype(jnp.float32) * scale).astype(v.dtype)
 
 
 def _topk_mask(v, k_frac: float):
@@ -48,27 +69,47 @@ def _topk_mask(v, k_frac: float):
 
 def compressed_psum(g, axis_name: str, err=None, *,
                     k_frac: Optional[float] = None,
-                    quantize: bool = True) -> Tuple[Any, Any]:
+                    quantize: bool = True,
+                    wire: str = "s8") -> Tuple[Any, Any]:
     """Mean-reduce ``g`` over ``axis_name`` through a lossy compressor.
 
     Returns ``(reduced, new_err)`` where ``new_err`` is the local residual
     (error-feedback state) to pass back in on the next step.  ``err=None``
-    means a zero accumulator.
+    means a zero accumulator.  ``wire="s8"`` (default) emits a real int8
+    all-gather collective when quantizing; ``wire="f32"`` reduces the
+    dequantized tensor with ``lax.pmean`` (identical numerics, f32 wire).
     """
+    if wire not in WIRE_FORMATS:
+        raise ValueError(f"wire must be one of {WIRE_FORMATS}, got {wire!r}")
     acc = g if err is None else g + err
     comp = acc
     if k_frac is not None:
         comp = comp * _topk_mask(comp, k_frac)
-    if quantize:
-        comp = _quantize_int8(comp)
-    new_err = acc - comp
-    out = lax.pmean(comp, axis_name)
+    if not quantize:
+        new_err = acc - comp
+        return lax.pmean(comp, axis_name), new_err
+    q, scale = _quantize_parts(comp)
+    # dequantize in f32, then back to the input dtype so the error-feedback
+    # state keeps its dtype across steps (bf16 grads -> bf16 residual)
+    dq = (q.astype(jnp.float32) * scale).astype(acc.dtype)
+    new_err = acc - dq
+    # gather-based s8 only wins below the 8/g break-even (module docstring)
+    if wire == "s8" and lax.psum(1, axis_name) < 8:
+        # the actual s8 collective: payload + per-device scales gathered,
+        # dequantized mean taken locally (== pmean of the dequantized)
+        qg = lax.all_gather(q, axis_name)                     # s8 wire
+        sg = lax.all_gather(scale, axis_name)                 # [g] f32
+        sg = sg.reshape((-1,) + (1,) * q.ndim)
+        out = jnp.mean(qg.astype(jnp.float32) * sg, axis=0).astype(acc.dtype)
+    else:
+        out = lax.pmean(dq, axis_name)
     return out, new_err
 
 
 def compressed_psum_tree(grads, axis_name: str, err=None, *,
                          k_frac: Optional[float] = None,
-                         quantize: bool = True) -> Tuple[Any, Any]:
+                         quantize: bool = True,
+                         wire: str = "s8") -> Tuple[Any, Any]:
     """Tree-structured :func:`compressed_psum` over every gradient leaf.
 
     ``err`` is a matching pytree of residuals (or ``None`` for a fresh
@@ -85,7 +126,7 @@ def compressed_psum_tree(grads, axis_name: str, err=None, *,
     flat_g, treedef = jax.tree.flatten(grads)
     flat_e = jax.tree.leaves(err)
     outs = [compressed_psum(g, axis_name, e, k_frac=k_frac,
-                            quantize=quantize)
+                            quantize=quantize, wire=wire)
             for g, e in zip(flat_g, flat_e)]
     reduced = jax.tree.unflatten(treedef, [o[0] for o in outs])
     new_err = jax.tree.unflatten(treedef, [o[1] for o in outs])

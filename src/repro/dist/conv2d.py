@@ -16,30 +16,51 @@ Data placement (NCHW activations, OIHW kernels):
 * ``Out [N, K, H', W']`` sharded ``P("b", "k", "h", "w")``, produced by an
   all-reduce over the c-axis.
 
-Spatial decomposition (``Ph``/``Pw > 1``) uses :func:`halo_exchange_1d`:
-each shard is extended by the stencil's ``lo``/``hi`` context rows from its
-mesh neighbours, with ppermute's zero fill providing SAME zero padding at
-the global image boundary — the single-rank case degenerates to plain zero
-padding, so padding and halo share one code path.
+Spatial decomposition (``Ph``/``Pw > 1``) partitions the *output* rows
+evenly and reconstructs each rank's input window from the evenly sharded
+input via :func:`halo_exchange_1d` plus a per-rank window slice (see
+:class:`SpatialPlan`); ppermute's zero fill provides the SAME zero padding
+at the global image boundary, so padding and halo share one code path and
+strided / VALID convolutions shard spatially too (the stride-1 /
+``lo+hi == k-1`` restriction is gone).
 
 ``schedule="ring"`` is the paper's pipelined variant: the input's C-slabs
 rotate around the k-ring and each arriving slab is immediately contracted
 (local conv) against the matching kernel C-slice — the ring-pipelined
 c-slab reduction.
+
+**Differentiation.**  ``conv2d_distributed`` carries a ``jax.custom_vjp``
+whose backward pass transposes the forward communication structure
+(paper Sec. 4's observation that fwd, dIn and dKer share one grid):
+
+* the c-axis all-reduce transposes to a broadcast — the output cotangent
+  arrives replicated over c, no collective;
+* the k-axis input gather transposes to a k-axis reduce-scatter of dIn
+  (``dIn`` is the transposed-kernel distributed conv);
+* the b-axis kernel gather transposes to a b-axis reduce-scatter of dKer
+  (``dKer`` is the batch/spatial-contraction distributed correlation,
+  all-reduced over the spatial axes);
+* the halo exchange transposes to :func:`halo_accumulate_1d`.
+
+``conv_comm_elems`` / ``conv_train_comm_elems`` give the analytic
+per-device wire volumes of the forward and forward+backward schedules that
+``launch.hlo_analysis`` numbers are validated against.
 """
 
 from __future__ import annotations
 
 import functools
-from typing import Tuple, Union
+from typing import NamedTuple, Tuple, Union
 
+import jax
+import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.dist._compat import shard_map
 from repro.dist.collectives import (SCHEDULES, gather_axis, make_mesh,
-                                    ring_reduce)
-from repro.dist.halo import halo_exchange_1d
+                                    ring_reduce, scatter_axis)
+from repro.dist.halo import halo_accumulate_1d, halo_exchange_1d
 
 AXES = ("b", "h", "w", "k", "c")
 _DIMNUMS = ("NCHW", "OIHW", "NCHW")
@@ -68,13 +89,85 @@ def _pad_amounts(size: int, k: int, s: int, pad) -> Tuple[int, int, int]:
     return lo, hi, (size + lo + hi - k) // s + 1
 
 
-def _local_conv(xl, wl, *, sizes, stride, pads, schedule):
+class SpatialPlan(NamedTuple):
+    """Decomposition of one spatial dim over ``p`` ranks, general stride.
+
+    Output rows are split evenly (``out % p == 0``); rank ``r`` evaluates
+    global output rows ``[r*out/p, (r+1)*out/p)``, which read global input
+    rows ``[r*(out/p)*s - lo, ...)`` — a window of ``win`` rows whose start
+    drifts by ``shift = (size - out*s)/p`` rows per rank relative to the
+    evenly sharded input.  The uniform halo ``(lo_x, hi_x)`` covers the
+    worst-case drift for every rank; each rank then slices its ``win``-row
+    window at offset ``lo_x - lo - r*shift``.  For stride-1 SAME this
+    degenerates to the classic ``(lo, hi)`` halo with an identity slice.
+    """
+
+    p: int        # ranks on this axis
+    size: int     # global input extent
+    k: int        # kernel extent
+    s: int        # stride
+    lo: int       # conv padding below
+    hi: int       # conv padding above
+    out: int      # global output extent
+    win: int      # per-rank input window rows = (out/p - 1)*s + k
+    shift: int    # per-rank window drift = (size - out*s)/p
+    lo_x: int     # uniform halo rows fetched from predecessors (+ zero pad)
+    hi_x: int     # uniform halo rows fetched from successors (+ zero pad)
+
+    @property
+    def identity_slice(self) -> bool:
+        return self.win == self.size // self.p + self.lo_x + self.hi_x \
+            and self.shift == 0 and self.lo_x == self.lo
+
+    def offset(self, axis_name: str):
+        """Local window start within the halo-extended block (traced when
+        the drift is rank-dependent)."""
+        base = self.lo_x - self.lo
+        if self.p == 1 or self.shift == 0:
+            return base
+        return base - lax.axis_index(axis_name) * self.shift
+
+
+def _spatial_plan(size: int, k: int, s: int, pad, p: int,
+                  dim: str) -> SpatialPlan:
+    lo, hi, out = _pad_amounts(size, k, s, pad)
+    if p <= 0 or size % p or out % p:
+        raise ValueError(
+            f"spatial sharding over '{dim}' needs the input extent "
+            f"({size}) and output extent ({out}) divisible by P{dim}={p}")
+    win = (out // p - 1) * s + k
+    shift = (size - out * s) // p  # exact: p | size and p | out*s
+    lo_x = lo + max(0, (p - 1) * shift)
+    hi_x = max(0, win - lo - size // p + max(0, -(p - 1) * shift))
+    return SpatialPlan(p=p, size=size, k=k, s=s, lo=lo, hi=hi, out=out,
+                       win=win, shift=shift, lo_x=lo_x, hi_x=hi_x)
+
+
+def _halo_and_window(xl, plans: Tuple[SpatialPlan, SpatialPlan]):
+    """Halo-extend the local shard and slice each rank's conv window.
+
+    Returns ``(extended_block, window, (off_h, off_w))`` — the forward
+    consumes only the window; the backward also needs the extended block
+    shape and the slice offsets to transpose the reconstruction."""
+    plan_h, plan_w = plans
+    xh = halo_exchange_1d(xl, "h", spatial_dim=2, lo=plan_h.lo_x,
+                          hi=plan_h.hi_x)
+    xh = halo_exchange_1d(xh, "w", spatial_dim=3, lo=plan_w.lo_x,
+                          hi=plan_w.hi_x)
+    off_h, off_w = plan_h.offset("h"), plan_w.offset("w")
+    xwin = xh
+    if not plan_h.identity_slice:
+        xwin = lax.dynamic_slice_in_dim(xwin, off_h, plan_h.win, axis=2)
+    if not plan_w.identity_slice:
+        xwin = lax.dynamic_slice_in_dim(xwin, off_w, plan_w.win, axis=3)
+    return xh, xwin, (off_h, off_w)
+
+
+def _local_conv(xl, wl, *, sizes, stride, plans, schedule):
     pb, ph, pw, pk, pc = (sizes[a] for a in AXES)
-    (lo_h, hi_h), (lo_w, hi_w) = pads
     # halo (interior) / zero pad (global boundary) on the thin C sub-shard,
     # before any gather so boundary traffic is minimal
-    xl = halo_exchange_1d(xl, "h", spatial_dim=2, lo=lo_h, hi=hi_h)
-    xl = halo_exchange_1d(xl, "w", spatial_dim=3, lo=lo_w, hi=hi_w)
+    _, xl, _ = _halo_and_window(xl, plans)
     # kernel contraction sub-shard gathered over the batch axis
     wg = gather_axis(wl, "b", dim=1, schedule=schedule) if pb > 1 else wl
     conv = functools.partial(
@@ -101,45 +194,74 @@ def _local_conv(xl, wl, *, sizes, stride, pads, schedule):
     return out
 
 
-def conv2d_distributed(x, w, mesh: Mesh, *, schedule: str = "allgather",
-                       stride: Union[int, Tuple[int, int]] = (1, 1),
-                       padding: Padding = "SAME"):
-    """NCHW x OIHW convolution distributed over a 5-axis grid; numerically
-    matches ``lax.conv_general_dilated(x, w, stride, padding)``."""
-    if schedule not in SCHEDULES:
-        raise ValueError(f"schedule must be one of {SCHEDULES}")
-    sizes = dict(mesh.shape)
-    missing = [a for a in AXES if a not in sizes]
-    if missing:
-        raise ValueError(f"mesh lacks axes {missing}; use make_conv_mesh")
-    if isinstance(stride, int):
-        stride = (stride, stride)
-    N, C, H, W = x.shape
-    K, C2, kh, kw = w.shape
+# --------------------------------------------------------------------------
+# Backward pass: the transposed communication schedule
+# --------------------------------------------------------------------------
+
+def _dx_local(gl, wg, *, stride):
+    """dIn of the local VALID conv: the transposed-kernel conv —
+    ``conv(dOut dilated by the stride, flip(Ker) with O/I swapped)``."""
+    kh, kw = wg.shape[2], wg.shape[3]
+    return lax.conv_general_dilated(
+        gl, lax.rev(wg, (2, 3)), window_strides=(1, 1),
+        padding=((kh - 1, kh - 1), (kw - 1, kw - 1)), lhs_dilation=stride,
+        dimension_numbers=("NCHW", "IOHW", "NCHW"))
+
+
+def _dw_local(xg, gl, *, stride):
+    """dKer of the local VALID conv: the batch-contraction correlation —
+    In slides under the stride-dilated dOut, contracting over N."""
+    out = lax.conv_general_dilated(
+        xg, gl, window_strides=(1, 1), padding="VALID",
+        rhs_dilation=stride, dimension_numbers=("CNHW", "IOHW", "NCHW"))
+    return out.transpose(1, 0, 2, 3)
+
+
+def _local_conv_bwd(xl, wl, gl, *, sizes, stride, plans, schedule):
+    """One shard_map transposing the forward schedule: gl (the Out
+    cotangent) arrives replicated over c (transpose of the all-reduce);
+    the forward gathers are replayed, dIn is reduce-scattered over k and
+    halo-accumulated, dKer is all-reduced over the spatial axes and
+    reduce-scattered over b."""
     pb, ph, pw, pk, pc = (sizes[a] for a in AXES)
-    if C != C2:
-        raise ValueError(f"channel mismatch: x {x.shape} vs w {w.shape}")
-    pad_spec = (padding, padding) if isinstance(padding, str) else padding
-    lo_h, hi_h, out_h = _pad_amounts(H, kh, stride[0], pad_spec[0])
-    lo_w, hi_w, out_w = _pad_amounts(W, kw, stride[1], pad_spec[1])
-    for extent, div, what in [
-            (N, pb, "N % Pb"), (H, ph, "H % Ph"), (W, pw, "W % Pw"),
-            (K, pk, "K % Pk"), (C, pc * pk, "C % (Pc*Pk)"),
-            (C, pc * pb, "C % (Pc*Pb)")]:
-        if div <= 0 or extent % div:
-            raise ValueError(f"shape not divisible by grid: {what} != 0 "
-                             f"({extent} % {div})")
-    for p_sp, st, lo, hi, k, dim in [(ph, stride[0], lo_h, hi_h, kh, "h"),
-                                     (pw, stride[1], lo_w, hi_w, kw, "w")]:
-        if p_sp > 1 and (st != 1 or lo + hi != k - 1):
-            raise NotImplementedError(
-                f"spatial sharding over '{dim}' needs stride 1 with "
-                f"SAME-style padding (lo+hi == k-1); got stride={st}, "
-                f"pad=({lo},{hi}), k={k}")
+    plan_h, plan_w = plans
+    # replay the forward operand reconstruction (rematerialized, not saved)
+    xh, xwin, (off_h, off_w) = _halo_and_window(xl, plans)
+    wg = gather_axis(wl, "b", dim=1, schedule=schedule) if pb > 1 else wl
+    xg = gather_axis(xwin, "k", dim=1, schedule=schedule) if pk > 1 else xwin
+
+    # --- dIn: transposed-kernel conv, k-gather transposes to k-scatter ----
+    dxg = _dx_local(gl, wg, stride=stride)
+    dxwin = scatter_axis(dxg, "k", dim=1, schedule=schedule) \
+        if pk > 1 else dxg
+    if plan_h.identity_slice and plan_w.identity_slice:
+        dxe = dxwin
+    else:  # transpose of the window slice: scatter back into the block
+        dxe = jnp.zeros(xh.shape, dxwin.dtype)
+        dxe = lax.dynamic_update_slice(
+            dxe, dxwin, (0, 0,
+                         off_h if not plan_h.identity_slice else 0,
+                         off_w if not plan_w.identity_slice else 0))
+    dxl = halo_accumulate_1d(dxe, "w", spatial_dim=3, lo=plan_w.lo_x,
+                             hi=plan_w.hi_x)
+    dxl = halo_accumulate_1d(dxl, "h", spatial_dim=2, lo=plan_h.lo_x,
+                             hi=plan_h.hi_x)
+
+    # --- dKer: batch/spatial contraction, b-gather transposes to b-scatter
+    dwg = _dw_local(xg, gl, stride=stride)
+    if ph * pw > 1:  # Ker was replicated over h/w: transpose is a psum
+        dwg = lax.psum(dwg, ("h", "w"))
+    dwl = scatter_axis(dwg, "b", dim=1, schedule=schedule) \
+        if pb > 1 else dwg
+    return dxl.astype(xl.dtype), dwl.astype(wl.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5))
+def _conv2d_vjp(x, w, mesh, schedule, stride, plans):
+    sizes = dict(mesh.shape)
     fn = shard_map(
         functools.partial(_local_conv, sizes=sizes, stride=stride,
-                          pads=((lo_h, hi_h), (lo_w, hi_w)),
-                          schedule=schedule),
+                          plans=plans, schedule=schedule),
         mesh=mesh,
         in_specs=(P("b", ("c", "k"), "h", "w"),
                   P("k", ("c", "b"), None, None)),
@@ -148,30 +270,141 @@ def conv2d_distributed(x, w, mesh: Mesh, *, schedule: str = "allgather",
     return fn(x, w)
 
 
+def _conv2d_fwd(x, w, mesh, schedule, stride, plans):
+    return _conv2d_vjp(x, w, mesh, schedule, stride, plans), (x, w)
+
+
+def _conv2d_bwd(mesh, schedule, stride, plans, res, g):
+    x, w = res
+    sizes = dict(mesh.shape)
+    fn = shard_map(
+        functools.partial(_local_conv_bwd, sizes=sizes, stride=stride,
+                          plans=plans, schedule=schedule),
+        mesh=mesh,
+        in_specs=(P("b", ("c", "k"), "h", "w"),
+                  P("k", ("c", "b"), None, None),
+                  P("b", "k", "h", "w")),
+        out_specs=(P("b", ("c", "k"), "h", "w"),
+                   P("k", ("c", "b"), None, None)),
+        check_rep=False)
+    return fn(x, w, g)
+
+
+_conv2d_vjp.defvjp(_conv2d_fwd, _conv2d_bwd)
+
+
+def _conv_plans(x_shape, w_shape, grid, stride, padding
+                ) -> Tuple[SpatialPlan, SpatialPlan]:
+    N, C, H, W = x_shape
+    K, C2, kh, kw = w_shape
+    pb, ph, pw, pk, pc = grid
+    if C != C2:
+        raise ValueError(f"channel mismatch: x {x_shape} vs w {w_shape}")
+    pad_spec = (padding, padding) if isinstance(padding, str) else padding
+    plan_h = _spatial_plan(H, kh, stride[0], pad_spec[0], ph, "h")
+    plan_w = _spatial_plan(W, kw, stride[1], pad_spec[1], pw, "w")
+    for extent, div, what in [
+            (N, pb, "N % Pb"), (K, pk, "K % Pk"), (C, pc * pk, "C % (Pc*Pk)"),
+            (C, pc * pb, "C % (Pc*Pb)")]:
+        if div <= 0 or extent % div:
+            raise ValueError(f"shape not divisible by grid: {what} != 0 "
+                             f"({extent} % {div})")
+    return plan_h, plan_w
+
+
+def conv_grid_divides(x_shape, w_shape, grid, *, stride=(1, 1),
+                      padding: Padding = "SAME") -> bool:
+    """True when the shapes satisfy every runtime divisibility constraint
+    of :func:`conv2d_distributed` on ``grid`` (batch, feature sub-shards,
+    and the spatial input *and output* extents) — the single predicate the
+    synthesizer and model-level helpers share."""
+    if isinstance(stride, int):
+        stride = (stride, stride)
+    try:
+        _conv_plans(x_shape, w_shape, grid, tuple(stride), padding)
+    except ValueError:
+        return False
+    return True
+
+
+def conv2d_distributed(x, w, mesh: Mesh, *, schedule: str = "allgather",
+                       stride: Union[int, Tuple[int, int]] = (1, 1),
+                       padding: Padding = "SAME"):
+    """NCHW x OIHW convolution distributed over a 5-axis grid; numerically
+    matches ``lax.conv_general_dilated(x, w, stride, padding)`` and is
+    differentiable (custom VJP transposing the communication schedule)."""
+    if schedule not in SCHEDULES:
+        raise ValueError(f"schedule must be one of {SCHEDULES}")
+    sizes = dict(mesh.shape)
+    missing = [a for a in AXES if a not in sizes]
+    if missing:
+        raise ValueError(f"mesh lacks axes {missing}; use make_conv_mesh")
+    if isinstance(stride, int):
+        stride = (stride, stride)
+    grid = tuple(sizes[a] for a in AXES)
+    plans = _conv_plans(x.shape, w.shape, grid, stride, padding)
+    return _conv2d_vjp(x, w, mesh, schedule, tuple(stride), plans)
+
+
+# --------------------------------------------------------------------------
+# Analytic per-device communication accounting (fwd and fwd+bwd)
+# --------------------------------------------------------------------------
+
 def conv_comm_elems(x_shape, w_shape, grid, *, stride=(1, 1),
                     padding: Padding = "SAME") -> dict:
-    """Analytic per-device communication (elements) of the schedule above:
-    gather In over k, gather Ker over b, all-reduce Out over c, plus the
-    spatial halo — the runtime counterpart of ``core.grid.comm_volume``."""
+    """Analytic per-device communication (elements) of the forward
+    schedule: gather In over k, gather Ker over b, all-reduce Out over c,
+    plus the spatial halo — the runtime counterpart of
+    ``core.grid.comm_volume``."""
     if isinstance(stride, int):
         stride = (stride, stride)
     N, C, H, W = x_shape
     K, _, kh, kw = w_shape
     pb, ph, pw, pk, pc = grid
-    pad_spec = (padding, padding) if isinstance(padding, str) else padding
-    lo_h, hi_h, out_h = _pad_amounts(H, kh, stride[0], pad_spec[0])
-    lo_w, hi_w, out_w = _pad_amounts(W, kw, stride[1], pad_spec[1])
-    hl, wl = H // ph + lo_h + hi_h, W // pw + lo_w + hi_w
+    plan_h, plan_w = _conv_plans(x_shape, w_shape, grid, stride, padding)
     csub_in = C / (pc * pk)
-    gather_in = (N / pb) * csub_in * hl * wl * (pk - 1)
+    gather_in = (N / pb) * csub_in * plan_h.win * plan_w.win * (pk - 1)
     gather_ker = K / pk * (C / (pc * pb)) * kh * kw * (pb - 1)
-    reduce_out = 2 * (N / pb) * (K / pk) * (out_h / ph) * (out_w / pw) \
-        * (pc - 1) / pc
+    reduce_out = 2 * (N / pb) * (K / pk) * (plan_h.out / ph) \
+        * (plan_w.out / pw) * (pc - 1) / pc
     halo = 0.0
     if ph > 1:
-        halo += (lo_h + hi_h) * (N / pb) * csub_in * (W // pw)
+        halo += (plan_h.lo_x + plan_h.hi_x) * (N / pb) * csub_in * (W // pw)
     if pw > 1:
-        halo += (lo_w + hi_w) * (N / pb) * csub_in * hl
+        h_ext = H // ph + plan_h.lo_x + plan_h.hi_x
+        halo += (plan_w.lo_x + plan_w.hi_x) * (N / pb) * csub_in * h_ext
     return {"gather_in": gather_in, "gather_ker": gather_ker,
             "reduce_out": reduce_out, "halo": halo,
             "total": gather_in + gather_ker + reduce_out + halo}
+
+
+def conv_train_comm_elems(x_shape, w_shape, grid, *, stride=(1, 1),
+                          padding: Padding = "SAME") -> dict:
+    """Forward + backward analytic per-device wire volume (elements).
+
+    The backward shard_map replays the forward halo + both gathers
+    (rematerialization), then transposes them: dIn reduce-scatters over k
+    (same volume as the In gather) and halo-accumulates (same volume as
+    the halo), dKer all-reduces over the spatial axes and reduce-scatters
+    over b (same volume as the Ker gather).  The c-axis all-reduce has no
+    backward counterpart (its transpose is a broadcast of the already
+    replicated cotangent).
+    """
+    if isinstance(stride, int):
+        stride = (stride, stride)
+    K, C, kh, kw = w_shape[0], w_shape[1], w_shape[2], w_shape[3]
+    pb, ph, pw, pk, pc = grid
+    fwd = conv_comm_elems(x_shape, w_shape, grid, stride=stride,
+                          padding=padding)
+    psp = ph * pw
+    psum_ker = (2 * (K / pk) * (C / pc) * kh * kw * (psp - 1) / psp
+                if psp > 1 else 0.0)
+    bwd = {"halo_replay": fwd["halo"],
+           "gather_in_replay": fwd["gather_in"],
+           "gather_ker_replay": fwd["gather_ker"],
+           "rs_in": fwd["gather_in"],
+           "rs_ker": fwd["gather_ker"],
+           "psum_ker_spatial": psum_ker,
+           "halo_acc": fwd["halo"]}
+    bwd["total"] = sum(v for k, v in bwd.items() if k != "total")
+    return {"fwd": fwd, "bwd": bwd, "total": fwd["total"] + bwd["total"]}

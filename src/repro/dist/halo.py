@@ -11,10 +11,21 @@ and the caller never special-cases it.
 Shards smaller than the halo are handled by multi-hop permutes: hop ``j``
 fetches the block ``j`` ranks away, and the concatenated strip is sliced to
 the requested width.
+
+The exchange is linear, and its transpose is :func:`halo_accumulate_1d`:
+the cotangent's halo strips are pushed *back* to the shards that own those
+rows and summed into their boundaries (cotangent rows past the global
+boundary are dropped — the transpose of zero fill).  ``halo_exchange_1d``
+carries a ``jax.custom_vjp`` wiring the two together, so reverse-mode
+autodiff of any spatially sharded conv reuses the same neighbour-message
+structure (same wire volume) as the forward exchange.
 """
 
 from __future__ import annotations
 
+import functools
+
+import jax
 import jax.numpy as jnp
 from jax import lax
 
@@ -53,19 +64,7 @@ def _strip_from_next(x, axis_name: str, dim: int, hi: int, n: int):
         else jnp.concatenate(blocks, axis=dim)
 
 
-def halo_exchange_1d(x, axis_name: str, *, spatial_dim: int,
-                     lo: int, hi: int):
-    """Extend the local shard by ``lo``/``hi`` halo rows along
-    ``spatial_dim``, filled from the neighbouring shards on mesh axis
-    ``axis_name`` (zeros beyond the global array boundary).
-
-    Must be called inside ``shard_map``.  Returns an array whose
-    ``spatial_dim`` extent is ``x.shape[spatial_dim] + lo + hi``.
-    """
-    if lo < 0 or hi < 0:
-        raise ValueError(f"halo widths must be >= 0, got lo={lo} hi={hi}")
-    if lo == 0 and hi == 0:
-        return x
+def _exchange(x, axis_name: str, spatial_dim: int, lo: int, hi: int):
     n = lax.psum(1, axis_name)  # static axis size
     parts = []
     if lo > 0:
@@ -74,3 +73,89 @@ def halo_exchange_1d(x, axis_name: str, *, spatial_dim: int,
     if hi > 0:
         parts.append(_strip_from_next(x, axis_name, spatial_dim, hi, n))
     return jnp.concatenate(parts, axis=spatial_dim)
+
+
+def _dimslice(ndim: int, dim: int, sl: slice):
+    return tuple(sl if d == dim else slice(None) for d in range(ndim))
+
+
+def halo_accumulate_1d(y, axis_name: str, *, spatial_dim: int,
+                       lo: int, hi: int):
+    """Transpose of :func:`halo_exchange_1d`: fold the ``lo``/``hi`` halo
+    strips of a cotangent back into the shards that own those rows.
+
+    ``y`` has extent ``size + lo + hi`` along ``spatial_dim``; the result
+    has extent ``size``: the core plus, summed into its boundary rows, the
+    halo strips pushed back along the inverted neighbour permutations
+    (multi-hop blocks retrace their hops).  Strips that crossed the global
+    boundary in the forward direction have no owner and are dropped.
+    """
+    if lo < 0 or hi < 0:
+        raise ValueError(f"halo widths must be >= 0, got lo={lo} hi={hi}")
+    if lo == 0 and hi == 0:
+        return y
+    size = y.shape[spatial_dim] - lo - hi
+    if size <= 0:
+        raise ValueError(f"cotangent extent {y.shape[spatial_dim]} too "
+                         f"small for halo lo={lo} hi={hi}")
+    n = lax.psum(1, axis_name)
+    dx = y[_dimslice(y.ndim, spatial_dim, slice(lo, lo + size))]
+    if lo > 0:
+        hops = -(-lo // size)
+        off = 0
+        for hop in range(hops, 0, -1):  # forward concat order: farthest 1st
+            take = min(size, lo - (hop - 1) * size)
+            blk = y[_dimslice(y.ndim, spatial_dim, slice(off, off + take))]
+            off += take
+            perm = [(i + hop, i) for i in range(n - hop)]
+            recv = (lax.ppermute(blk, axis_name, perm) if perm
+                    else jnp.zeros_like(blk))
+            dx = dx.at[_dimslice(y.ndim, spatial_dim,
+                                 slice(size - take, size))].add(recv)
+    if hi > 0:
+        hops = -(-hi // size)
+        off = lo + size
+        for hop in range(1, hops + 1):  # forward concat order: nearest 1st
+            take = min(size, hi - (hop - 1) * size)
+            blk = y[_dimslice(y.ndim, spatial_dim, slice(off, off + take))]
+            off += take
+            perm = [(i, i + hop) for i in range(n - hop)]
+            recv = (lax.ppermute(blk, axis_name, perm) if perm
+                    else jnp.zeros_like(blk))
+            dx = dx.at[_dimslice(y.ndim, spatial_dim,
+                                 slice(0, take))].add(recv)
+    return dx
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4))
+def _halo_exchange_vjp(x, axis_name, spatial_dim, lo, hi):
+    return _exchange(x, axis_name, spatial_dim, lo, hi)
+
+
+def _halo_fwd(x, axis_name, spatial_dim, lo, hi):
+    return _exchange(x, axis_name, spatial_dim, lo, hi), None
+
+
+def _halo_bwd(axis_name, spatial_dim, lo, hi, _res, g):
+    return (halo_accumulate_1d(g, axis_name, spatial_dim=spatial_dim,
+                               lo=lo, hi=hi),)
+
+
+_halo_exchange_vjp.defvjp(_halo_fwd, _halo_bwd)
+
+
+def halo_exchange_1d(x, axis_name: str, *, spatial_dim: int,
+                     lo: int, hi: int):
+    """Extend the local shard by ``lo``/``hi`` halo rows along
+    ``spatial_dim``, filled from the neighbouring shards on mesh axis
+    ``axis_name`` (zeros beyond the global array boundary).
+
+    Must be called inside ``shard_map``.  Returns an array whose
+    ``spatial_dim`` extent is ``x.shape[spatial_dim] + lo + hi``.
+    Differentiable: the VJP is :func:`halo_accumulate_1d`.
+    """
+    if lo < 0 or hi < 0:
+        raise ValueError(f"halo widths must be >= 0, got lo={lo} hi={hi}")
+    if lo == 0 and hi == 0:
+        return x
+    return _halo_exchange_vjp(x, axis_name, spatial_dim, lo, hi)

@@ -19,19 +19,27 @@ replication the 2.5D variant, and a balanced ``(Pm, Pn, Pc)`` the 3D one.
 m-ring and each arriving chunk is contracted against the matching column
 slab of the gathered In, so no device ever materializes the full gathered
 Ker.
+
+**Differentiation.**  ``matmul_distributed`` carries a ``jax.custom_vjp``
+transposing the schedule: the Out cotangent arrives replicated over c
+(transpose of the all-reduce), the forward gathers are replayed, and
+``dIn = g @ Ker^T`` / ``dKer = In^T @ g`` are reduce-scattered over n / m
+respectively — each scatter moving exactly the volume of the gather it
+transposes.
 """
 
 from __future__ import annotations
 
 import functools
 
+import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.dist._compat import shard_map
 from repro.dist.collectives import (SCHEDULES, gather_axis, make_mesh,
-                                    ring_reduce)
+                                    ring_reduce, scatter_axis)
 
 AXES = ("m", "n", "c")
 
@@ -41,6 +49,41 @@ def make_matmul_mesh(grid) -> Mesh:
     if len(grid) != 3:
         raise ValueError(f"matmul grid must be (Pm, Pn, Pc), got {grid}")
     return make_mesh(grid, AXES)
+
+
+def matmul_mesh_from_conv(mesh: Mesh) -> Mesh:
+    """View a conv ``(b,h,w,k,c)`` mesh as a matmul ``(m,n,c)`` mesh:
+    the composite ``b*h*w`` extent becomes m (rows), k becomes n (columns),
+    c stays the contraction axis.  Device order is preserved, so the two
+    meshes coexist inside one program."""
+    devs = mesh.devices
+    if devs.ndim != 5:
+        raise ValueError(f"expected a 5-axis conv mesh, got {mesh}")
+    pb, ph, pw, pk, pc = devs.shape
+    return Mesh(devs.reshape(pb * ph * pw, pk, pc), AXES)
+
+
+def _check_matmul_shapes(M: int, C: int, N: int, grid) -> None:
+    """Raise unless the shapes satisfy the runtime sub-shard divisibility
+    constraints — the single source both the runtime op and the
+    :func:`matmul_grid_divides` predicate share."""
+    pm, pn, pc = grid
+    for extent, div, what in [(M, pm, "M % Pm"), (N, pn, "N % Pn"),
+                              (C, pc * pn, "C % (Pc*Pn)"),
+                              (C, pc * pm, "C % (Pc*Pm)")]:
+        if div <= 0 or extent % div:
+            raise ValueError(f"shape not divisible by grid: {what} != 0 "
+                             f"({extent} % {div})")
+
+
+def matmul_grid_divides(M: int, C: int, N: int, grid) -> bool:
+    """True when the operand shapes satisfy the runtime sub-shard
+    divisibility constraints of :func:`matmul_distributed`."""
+    try:
+        _check_matmul_shapes(M, C, N, grid)
+    except ValueError:
+        return False
+    return True
 
 
 def _local_matmul(xl, wl, *, pm, pn, pc, schedule):
@@ -68,24 +111,24 @@ def _local_matmul(xl, wl, *, pm, pn, pc, schedule):
     return out
 
 
-def matmul_distributed(x, w, mesh: Mesh, *, schedule: str = "allgather"):
-    """``x @ w`` on the 3-axis grid; result matches the serial product."""
-    if schedule not in SCHEDULES:
-        raise ValueError(f"schedule must be one of {SCHEDULES}")
+def _local_matmul_bwd(xl, wl, gl, *, pm, pn, pc, schedule):
+    """Transposed schedule: replay the gathers, contract against the
+    replicated Out cotangent, reduce-scatter each operand gradient."""
+    xg = gather_axis(xl, "n", dim=1, schedule=schedule) if pn > 1 else xl
+    wg = gather_axis(wl, "m", dim=0, schedule=schedule) if pm > 1 else wl
+    dxg = gl @ wg.T                      # [M/pm, C/pc]
+    dwg = xg.T @ gl                      # [C/pc, N/pn]
+    dxl = scatter_axis(dxg, "n", dim=1, schedule=schedule) \
+        if pn > 1 else dxg
+    dwl = scatter_axis(dwg, "m", dim=0, schedule=schedule) \
+        if pm > 1 else dwg
+    return dxl.astype(xl.dtype), dwl.astype(wl.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def _matmul_vjp(x, w, mesh, schedule):
     sizes = dict(mesh.shape)
-    missing = [a for a in AXES if a not in sizes]
-    if missing:
-        raise ValueError(f"mesh lacks axes {missing}; use make_matmul_mesh")
     pm, pn, pc = sizes["m"], sizes["n"], sizes["c"]
-    (M, C), (C2, N) = x.shape, w.shape
-    if C != C2:
-        raise ValueError(f"contraction mismatch: {x.shape} @ {w.shape}")
-    for extent, div, what in [(M, pm, "M % Pm"), (N, pn, "N % Pn"),
-                              (C, pc * pn, "C % (Pc*Pn)"),
-                              (C, pc * pm, "C % (Pc*Pm)")]:
-        if div <= 0 or extent % div:
-            raise ValueError(f"shape not divisible by grid: {what} != 0 "
-                             f"({extent} % {div})")
     fn = shard_map(
         functools.partial(_local_matmul, pm=pm, pn=pn, pc=pc,
                           schedule=schedule),
@@ -96,10 +139,48 @@ def matmul_distributed(x, w, mesh: Mesh, *, schedule: str = "allgather"):
     return fn(x, w)
 
 
+def _matmul_fwd(x, w, mesh, schedule):
+    return _matmul_vjp(x, w, mesh, schedule), (x, w)
+
+
+def _matmul_bwd(mesh, schedule, res, g):
+    x, w = res
+    sizes = dict(mesh.shape)
+    pm, pn, pc = sizes["m"], sizes["n"], sizes["c"]
+    fn = shard_map(
+        functools.partial(_local_matmul_bwd, pm=pm, pn=pn, pc=pc,
+                          schedule=schedule),
+        mesh=mesh,
+        in_specs=(P("m", ("c", "n")), P(("c", "m"), "n"), P("m", "n")),
+        out_specs=(P("m", ("c", "n")), P(("c", "m"), "n")),
+        check_rep=False)
+    return fn(x, w, g)
+
+
+_matmul_vjp.defvjp(_matmul_fwd, _matmul_bwd)
+
+
+def matmul_distributed(x, w, mesh: Mesh, *, schedule: str = "allgather"):
+    """``x @ w`` on the 3-axis grid; result matches the serial product and
+    is differentiable (custom VJP transposing the schedule)."""
+    if schedule not in SCHEDULES:
+        raise ValueError(f"schedule must be one of {SCHEDULES}")
+    sizes = dict(mesh.shape)
+    missing = [a for a in AXES if a not in sizes]
+    if missing:
+        raise ValueError(f"mesh lacks axes {missing}; use make_matmul_mesh")
+    pm, pn, pc = sizes["m"], sizes["n"], sizes["c"]
+    (M, C), (C2, N) = x.shape, w.shape
+    if C != C2:
+        raise ValueError(f"contraction mismatch: {x.shape} @ {w.shape}")
+    _check_matmul_shapes(M, C, N, (pm, pn, pc))
+    return _matmul_vjp(x, w, mesh, schedule)
+
+
 def matmul_comm_elems(M: int, C: int, N: int, grid) -> dict:
-    """Analytic per-device communication (elements) of the schedule above —
-    the Sec. 2.2 accounting that ``analyze_hlo`` wire bytes are checked
-    against."""
+    """Analytic per-device communication (elements) of the forward
+    schedule — the Sec. 2.2 accounting that ``analyze_hlo`` wire bytes are
+    checked against."""
     pm, pn, pc = grid
     P_tot = pm * pn * pc
     gather_in = (M * C / P_tot) * (pn - 1)
@@ -108,3 +189,16 @@ def matmul_comm_elems(M: int, C: int, N: int, grid) -> dict:
     return {"gather_in": gather_in, "gather_ker": gather_ker,
             "reduce_out": reduce_out,
             "total": gather_in + gather_ker + reduce_out}
+
+
+def matmul_train_comm_elems(M: int, C: int, N: int, grid) -> dict:
+    """Forward + backward analytic per-device wire volume (elements): the
+    backward replays both gathers and transposes each into an equal-volume
+    reduce-scatter; the c-axis all-reduce transposes to a free broadcast."""
+    fwd = matmul_comm_elems(M, C, N, grid)
+    bwd = {"gather_in_replay": fwd["gather_in"],
+           "gather_ker_replay": fwd["gather_ker"],
+           "rs_in": fwd["gather_in"],
+           "rs_ker": fwd["gather_ker"]}
+    bwd["total"] = sum(v for k, v in bwd.items() if k != "total")
+    return {"fwd": fwd, "bwd": bwd, "total": fwd["total"] + bwd["total"]}

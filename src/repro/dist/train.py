@@ -1,0 +1,114 @@
+"""Grid-parallel CNN training: the full train step through ``repro.dist``.
+
+This is the paper's algorithms doing the job they were derived for —
+Demmel & Dinh (2018) and Chen et al. (2022) state their communication
+bounds for the *combined* forward + backward CNN computation, and the
+``repro.dist`` ops carry custom VJPs whose backward passes transpose the
+forward schedule on the same ``(Pb, Ph, Pw, Pk, Pc)`` grid.  The train
+step built here therefore runs loss, gradients and the AdamW update with
+every conv (and the classifier head matmul) on explicit-grid distributed
+ops; no GSPMD sharding specs are involved.
+
+``cnn_train_comm_elems`` walks the same layer structure as
+``models.cnn.forward_cnn`` and sums the analytic per-device fwd+bwd wire
+volumes of the distributed *ops* (``conv_train_comm_elems`` /
+``matmul_train_comm_elems``).  Each per-op total matches the compiled
+HLO of that op at ratio 1.0 (``make grad-test``); a whole compiled train
+step additionally pays inter-layer resharding that XLA inserts between
+ops (a conv emits Out as ``P(b,k,h,w)`` while the next conv consumes
+``P(b,(c,k),h,w)``, so grids with ``Pc > 1`` re-split the channel dim
+between layers — ~25-30% extra wire on the 8-device 2.5D acceptance
+grid).  Accounting for (or eliminating, by chaining the c-subshard
+layout forward) that reshard traffic is a ROADMAP follow-up.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, List, Optional, Tuple
+
+from jax.sharding import Mesh
+
+from repro.dist.conv2d import (AXES, conv_grid_divides,
+                               conv_train_comm_elems)
+from repro.dist.matmul import (matmul_grid_divides, matmul_mesh_from_conv,
+                               matmul_train_comm_elems)
+from repro.models.cnn import loss_cnn
+from repro.train.optim import AdamW
+from repro.train.step import TrainState, init_train_state, make_train_step
+
+
+def make_grid_train_step(optimizer: AdamW, mesh: Mesh, *,
+                         schedule: str = "allgather",
+                         pool_every: int = 2,
+                         n_microbatches: int = 1,
+                         loss_fn: Optional[Callable] = None) -> Callable:
+    """Train step (``(state, batch) -> (state, metrics)``) for the CNN on
+    an explicit 5-axis conv mesh.
+
+    ``loss_fn(params, batch, dist_mesh=..., dist_schedule=...)`` may be
+    supplied to train a different model through the dist ops; it defaults
+    to ``models.cnn.loss_cnn``.
+    """
+    base = loss_fn if loss_fn is not None else functools.partial(
+        loss_cnn, pool_every=pool_every)
+    loss = functools.partial(base, dist_mesh=mesh, dist_schedule=schedule)
+    return make_train_step(loss, optimizer,
+                           n_microbatches=n_microbatches, mode="dist-grid")
+
+
+def init_grid_train_state(params, optimizer: AdamW) -> TrainState:
+    """Plain (uncompressed) train state for the grid-parallel step."""
+    return init_train_state(params, optimizer, compress=False)
+
+
+def _cnn_layer_shapes(x_shape, channels: List[int], *, k: int,
+                      pool_every: int) -> List[Tuple[tuple, tuple]]:
+    """(x_shape, w_shape) per conv layer, mirroring ``forward_cnn``."""
+    N, C, H, W = x_shape
+    out = []
+    cin = C
+    for i, cout in enumerate(channels):
+        out.append(((N, cin, H, W), (cout, cin, k, k)))
+        cin = cout
+        if (i + 1) % pool_every == 0:
+            H, W = H // 2, W // 2
+    return out
+
+
+def cnn_train_comm_elems(x_shape, channels: List[int], n_classes: int,
+                         grid, *, k: int = 3, pool_every: int = 2) -> Dict:
+    """Analytic per-device fwd+bwd wire volume (elements) of the dist ops
+    in one CNN train step on ``grid = (Pb, Ph, Pw, Pk, Pc)`` — one entry
+    per conv layer plus the head matmul (0 when its shapes don't divide
+    the matmul view and it falls back to a dense GSPMD matmul).  ``total``
+    covers the ops only; a compiled train step adds inter-layer reshard
+    collectives on top (see module docstring)."""
+    if len(grid) != 5:
+        raise ValueError(f"conv grid must be (Pb,Ph,Pw,Pk,Pc), got {grid}")
+    layers = []
+    for xs, ws in _cnn_layer_shapes(x_shape, channels, k=k,
+                                    pool_every=pool_every):
+        layers.append(conv_train_comm_elems(xs, ws, grid))
+    pb, ph, pw, pk, pc = grid
+    mm_grid = (pb * ph * pw, pk, pc)
+    N, cin = x_shape[0], channels[-1]
+    if matmul_grid_divides(N, cin, n_classes, mm_grid):
+        head = matmul_train_comm_elems(N, cin, n_classes, mm_grid)
+    else:
+        head = {"fwd": {"total": 0.0}, "bwd": {"total": 0.0}, "total": 0.0}
+    total = sum(l["total"] for l in layers) + head["total"]
+    return {"layers": layers, "head": head, "total": total,
+            "fwd_total": sum(l["fwd"]["total"] for l in layers)
+            + head["fwd"]["total"],
+            "bwd_total": sum(l["bwd"]["total"] for l in layers)
+            + head["bwd"]["total"]}
+
+
+def grid_divides_cnn(x_shape, channels: List[int], grid, *, k: int = 3,
+                     pool_every: int = 2) -> bool:
+    """True when every conv layer of the CNN satisfies the runtime
+    divisibility constraints of ``conv2d_distributed`` on ``grid``."""
+    return all(conv_grid_divides(xs, ws, grid)
+               for xs, ws in _cnn_layer_shapes(x_shape, channels, k=k,
+                                               pool_every=pool_every))

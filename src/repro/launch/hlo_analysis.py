@@ -13,9 +13,11 @@ Accounting model:
             max over branches.
   hbm     — fusion-boundary traffic: operands + result bytes of top-level
             (unfused) ops; copies count twice; parameters/tuples free.
-  wire    — ring model per collective: all-gather/reduce-scatter/all-to-all
-            V*(g-1)/g, all-reduce 2*V*(g-1)/g, collective-permute V
-            (V = payload bytes, g = replica-group size).
+  wire    — ring model per collective, V = bytes of the *large* buffer
+            (the gathered result for all-gather, the pre-reduction input
+            for reduce-scatter): all-gather/all-to-all V*(g-1)/g,
+            reduce-scatter result*(g-1) == V*(g-1)/g, all-reduce
+            2*V*(g-1)/g, collective-permute V (one neighbour message).
 """
 
 from __future__ import annotations
@@ -311,6 +313,9 @@ class HloModule:
                     wire = 2 * v * (g - 1) / max(g, 1)
                 elif base == "collective-permute":
                     wire = v
+                elif base == "reduce-scatter":
+                    # rtype is the scattered shard; ring moves shard*(g-1)
+                    wire = v * (g - 1)
                 else:
                     wire = v * (g - 1) / max(g, 1)
                 t.wire[base] += wire
@@ -430,6 +435,7 @@ def top_contributors(text: str, *, key: str = "hbm", n: int = 25):
                     v = shape_bytes(op.rtype)
                     val = (2 * v * (g - 1) / g if base == "all-reduce"
                            else v if base == "collective-permute"
+                           else v * (g - 1) if base == "reduce-scatter"
                            else v * (g - 1) / max(g, 1))
             elif key == "flops":
                 if oc == "fusion":

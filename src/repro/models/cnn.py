@@ -1,11 +1,24 @@
 """CNN image model — the paper's own operator class, used by the
-reproduction examples/benchmarks (ResNet-style stack of stride-1 SAME convs
-with optional pooling), built on the framework's conv ops so the
-paper's distributed algorithms and Pallas kernel both apply."""
+reproduction examples/benchmarks (ResNet-style stack of SAME convs with
+optional pooling), built on the framework's conv ops so the paper's
+distributed algorithms and Pallas kernel both apply.
+
+Two execution paths share one parameter pytree:
+
+* the default GSPMD path through ``kernels.ops.conv2d_same`` (optionally
+  the Pallas kernel);
+* the **dist-grid** path (``dist_mesh=...``): every conv routes through
+  ``repro.dist.conv2d_distributed`` on the 5-axis ``(Pb,Ph,Pw,Pk,Pc)``
+  mesh and the classifier head through ``repro.dist.matmul_distributed``
+  on the ``(Pb*Ph*Pw, Pk, Pc)`` view of the same devices, so a whole
+  forward + backward (the dist ops carry custom VJPs) runs on the paper's
+  algorithms.  Elementwise glue (bias, relu, pooling) stays on global
+  arrays between the shard_map'd ops.
+"""
 
 from __future__ import annotations
 
-from typing import Dict, List, Tuple
+from typing import Dict, List
 
 import jax
 import jax.numpy as jnp
@@ -32,16 +45,39 @@ def init_cnn(key, *, channels: List[int], n_classes: int, in_channels: int = 3,
 
 
 def forward_cnn(params: Dict, x: jax.Array, *, pool_every: int = 2,
-                use_pallas: bool = False) -> jax.Array:
-    """x: [N, C, H, W] -> logits [N, n_classes]."""
+                use_pallas: bool = False, dist_mesh=None,
+                dist_schedule: str = "allgather") -> jax.Array:
+    """x: [N, C, H, W] -> logits [N, n_classes].
+
+    ``dist_mesh``: a 5-axis conv mesh (``dist.make_conv_mesh``) — routes
+    every conv (and, when the shapes divide its matmul view, the head)
+    through the ``repro.dist`` distributed ops.
+    """
+    if dist_mesh is not None:
+        from repro.dist.conv2d import conv2d_distributed
+        from repro.dist.matmul import (matmul_distributed,
+                                       matmul_grid_divides,
+                                       matmul_mesh_from_conv)
     for i, blk in enumerate(params["convs"]):
-        x = conv2d_same(x, blk["w"], use_pallas=use_pallas)
+        if dist_mesh is not None:
+            x = conv2d_distributed(x, blk["w"], dist_mesh,
+                                   schedule=dist_schedule)
+        else:
+            x = conv2d_same(x, blk["w"], use_pallas=use_pallas)
         x = jax.nn.relu(x + blk["b"][None, :, None, None])
         if (i + 1) % pool_every == 0:
             x = lax.reduce_window(x, -jnp.inf, lax.max, (1, 1, 2, 2),
                                   (1, 1, 2, 2), "VALID")
     x = jnp.mean(x, axis=(2, 3))
-    return x @ params["head"]
+    head = params["head"]
+    if dist_mesh is not None:
+        mm_mesh = matmul_mesh_from_conv(dist_mesh)
+        mm_grid = tuple(mm_mesh.shape[a] for a in ("m", "n", "c"))
+        if matmul_grid_divides(x.shape[0], head.shape[0], head.shape[1],
+                               mm_grid):
+            return matmul_distributed(x, head, mm_mesh,
+                                      schedule=dist_schedule)
+    return x @ head
 
 
 def loss_cnn(params: Dict, batch: Dict, **kw) -> jax.Array:

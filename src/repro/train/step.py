@@ -7,9 +7,15 @@ parallel/sharding.py.  Communication structure:
 
 * grads are formed per-microbatch and accumulated locally (one cross-
   device reduce per step, not per microbatch);
-* under GSPMD the gradient reduction over the data axes is emitted by XLA
-  from the sharding specs (reduce-scatter + all-gather when params are
-  FSDP-sharded — the ZeRO pattern);
+* ``mode="gspmd"`` (default): the gradient reduction over the data axes is
+  emitted by XLA from the sharding specs (reduce-scatter + all-gather when
+  params are FSDP-sharded — the ZeRO pattern);
+* ``mode="dist-grid"``: the loss routes through the ``repro.dist``
+  explicit-grid ops (see ``dist/train.py``), whose custom VJPs already
+  perform every cross-device reduction (c-axis all-reduce, k/b-axis
+  reduce-scatters, halo accumulation) — the step function itself adds no
+  collective, and gradient compression (which needs a bound mesh axis) is
+  rejected;
 * optionally grads crossing the ``pod`` axis are compressed (int8 + error
   feedback, dist/compress.py) via shard_map on just that axis.
 """
@@ -32,10 +38,20 @@ class TrainState(NamedTuple):
     err: Any = None          # error-feedback state when compression is on
 
 
+MODES = ("gspmd", "dist-grid")
+
+
 def make_train_step(loss_fn: Callable, optimizer: AdamW, *,
                     n_microbatches: int = 1,
-                    compress_axis: Optional[str] = None) -> Callable:
+                    compress_axis: Optional[str] = None,
+                    mode: str = "gspmd") -> Callable:
     """loss_fn(params, batch) -> scalar.  batch leaves: [global_batch, ...]."""
+    if mode not in MODES:
+        raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
+    if mode == "dist-grid" and compress_axis is not None:
+        raise ValueError(
+            "compress_axis needs a bound GSPMD mesh axis; in dist-grid "
+            "mode the reductions live inside the dist-op VJPs")
 
     def train_step(state: TrainState, batch: Dict) -> Tuple[TrainState, Dict]:
         if n_microbatches > 1:

@@ -58,14 +58,34 @@ def test_distributed_conv_strided_valid():
         from jax import lax
         from repro.dist.conv2d import conv2d_distributed, make_conv_mesh
         key = jax.random.PRNGKey(0)
+        def ref(x, w, s, p):
+            return lax.conv_general_dilated(
+                x, w, s, p, dimension_numbers=("NCHW","OIHW","NCHW"))
         x = jax.random.normal(key, (4, 8, 17, 17), jnp.float32)
         w = jax.random.normal(jax.random.PRNGKey(1), (8, 8, 3, 3),
                               jnp.float32)
-        ref = lax.conv_general_dilated(
-            x, w, (2, 2), "VALID", dimension_numbers=("NCHW","OIHW","NCHW"))
         mesh = make_conv_mesh((2, 1, 1, 2, 2))
         out = conv2d_distributed(x, w, mesh, stride=(2, 2), padding="VALID")
-        assert float(jnp.max(jnp.abs(out - ref))) < 1e-4
+        assert float(jnp.max(jnp.abs(out - ref(x, w, (2,2), "VALID")))) < 1e-4
+        # strided convs shard spatially too (generalized halo windows)
+        x2 = jax.random.normal(key, (4, 8, 16, 16), jnp.float32)
+        for grid in [(1, 2, 2, 2, 1), (1, 4, 1, 1, 2)]:
+            mesh = make_conv_mesh(grid)
+            for sched in ["allgather", "ring"]:
+                out = conv2d_distributed(x2, w, mesh, schedule=sched,
+                                         stride=(2, 2), padding="SAME")
+                err = float(jnp.max(jnp.abs(
+                    out - ref(x2, w, (2,2), "SAME"))))
+                assert err < 1e-4, (grid, sched, err)
+        # VALID + stride + spatial sharding: H=22, k=4, s=2 -> O=10
+        x3 = jax.random.normal(key, (2, 8, 22, 22), jnp.float32)
+        w3 = jax.random.normal(jax.random.PRNGKey(2), (4, 8, 4, 4),
+                               jnp.float32)
+        mesh = make_conv_mesh((1, 2, 1, 2, 2))
+        out = conv2d_distributed(x3, w3, mesh, stride=(2, 2),
+                                 padding="VALID")
+        assert float(jnp.max(jnp.abs(
+            out - ref(x3, w3, (2,2), "VALID")))) < 1e-4
         print("ok")
     """)
 

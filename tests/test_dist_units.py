@@ -133,6 +133,24 @@ def test_compressed_psum_error_feedback_converges():
     assert errs[-1] < 0.15 * float(jnp.max(jnp.abs(g)))
 
 
+def test_compressed_psum_preserves_err_dtype():
+    # the error-feedback state must round-trip through steps unchanged:
+    # bf16 grads in -> bf16 residual out (no silent f32 upcast)
+    g = jax.random.normal(jax.random.PRNGKey(5), (32,), jnp.bfloat16)
+
+    def f(gl, el):
+        return compressed_psum(gl, "x", el)
+
+    mesh = _mesh1()
+    fn = dist.shard_map(f, mesh=mesh, in_specs=(P("x"), P("x")),
+                        out_specs=(P("x"), P("x")), check_rep=False)
+    out, err = fn(g, jnp.zeros_like(g))
+    assert err.dtype == jnp.bfloat16
+    assert out.dtype == jnp.bfloat16
+    out, err = fn(g, err)  # state feeds back without dtype mismatch
+    assert err.dtype == jnp.bfloat16
+
+
 def test_compressed_psum_tree_shapes_and_none_err():
     grads = {"a": jnp.ones((4,)), "b": {"c": jnp.full((2, 3), 2.0)}}
 
