@@ -1,7 +1,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test fast-test dist-test grad-test demo bench
+.PHONY: test fast-test dist-test grad-test demo bench bench-full
 
 test:  ## tier-1 verify (full suite, fail-fast)
 	$(PY) -m pytest -x -q
@@ -18,5 +18,8 @@ grad-test:  ## distributed-op VJP / gradient checks (incl. 8-device grids)
 demo:  ## end-to-end distributed conv demo on 8 virtual devices
 	$(PY) examples/distributed_conv_demo.py
 
-bench:  ## dry-run benchmark suite
+bench:  ## CI smoke benchmark: writes BENCH_comm.json + BENCH_kernels.json
+	$(PY) benchmarks/run.py --quick
+
+bench-full:  ## full benchmark suite (all grids/layers + sharding sweep)
 	$(PY) benchmarks/run.py

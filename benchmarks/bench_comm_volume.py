@@ -1,9 +1,15 @@
 """The paper's central comparison (Sec. 2.2 cost analysis): communication
-volume of the 2D / 2.5D / 3D distributed CNN algorithms — analytic cost_C
-+ cost_I vs collective wire bytes measured from compiled HLO on 8 virtual
-devices (subprocess; the bench process keeps 1 device).  Also measures the
-fwd+bwd train-step volume through the dist-op custom VJPs against the
-transposed-schedule accounting (``conv_train_comm_elems``).
+volume and peak live memory of the 2D / 2.5D / 3D distributed CNN
+algorithms — analytic accounting vs collective wire bytes and per-device
+live bytes measured from compiled HLO on 8 virtual devices (subprocess;
+the bench process keeps 1 device).  Covers all three schedules
+(``allgather`` / ``ring`` / ``ring2``) for the forward pass and the
+fwd+bwd train step through the dist-op custom VJPs.
+
+``run_json(quick=...)`` returns the ``BENCH_comm.json`` records (schema:
+``{name, grid, schedule, wire_bytes, peak_elems, wall_ms}``) that
+``benchmarks/run.py`` persists as the regression baseline and also prints
+as CSV rows.
 """
 
 from __future__ import annotations
@@ -20,61 +26,106 @@ _BODY = """
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import json
+import time
 import jax, jax.numpy as jnp
-from repro.core import ConvProblem, comm_volume, synthesize
-from repro.core.grid import ProcessorGrid
-from repro.core.tile_optimizer import solve
-from repro.dist.conv2d import (conv2d_distributed, conv_train_comm_elems,
+from repro.dist.conv2d import (conv2d_distributed, conv_mem_elems,
+                               conv_train_comm_elems, conv_train_mem_elems,
                                make_conv_mesh)
-from repro.launch.hlo_analysis import analyze_hlo
+from repro.launch.hlo_analysis import analyze_hlo, live_bytes
 
-N, C, H, W, K, kh = 8, 32, 16, 16, 32, 3
-x = jax.ShapeDtypeStruct((N, C, H, W), jnp.float32)
-w = jax.ShapeDtypeStruct((K, C, kh, kh), jnp.float32)
-prob = ConvProblem.from_conv_layer(batch=N, cin=C, cout=K, h=H, w=W,
-                                   kh=kh, kw=kh, bytes_per_elem=4)
+QUICK = %(quick)r
+# c-heavy shape: the contraction-operand memory the 2.5D/3D family (and
+# the ring2 schedule) exists to manage dominates the conv scratch
+N, C, H, W, K, kh = 8, 128, 8, 8, 32, 3
+xs = jax.ShapeDtypeStruct((N, C, H, W), jnp.float32)
+ws = jax.ShapeDtypeStruct((K, C, kh, kh), jnp.float32)
+x = jax.random.normal(jax.random.PRNGKey(0), (N, C, H, W), jnp.float32)
+w = jax.random.normal(jax.random.PRNGKey(1), (K, C, kh, kh), jnp.float32)
+
+grids = [((8,1,1,1,1), "2D-DP"), ((2,1,1,2,2), "2.5D")]
+if not QUICK:
+    grids += [((4,1,1,2,1), "2D-SUMMA"), ((1,1,1,2,4), "3D-ish")]
+reps = 2 if QUICK else 5
+
+def wall_ms(compiled_fn, *args):
+    # takes the already-compiled executable: no recompile for timing
+    jax.block_until_ready(compiled_fn(*args))   # warmup
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = compiled_fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e3
+
 out = []
-for grid, algo in [((8,1,1,1,1), "2D-DP"), ((4,1,1,2,1), "2D-SUMMA"),
-                   ((2,1,1,2,2), "2.5D"), ((1,1,1,2,4), "3D-ish")]:
+for grid, algo in grids:
     mesh = make_conv_mesh(grid)
-    for sched in ["allgather", "ring"]:
-        fn = jax.jit(lambda a, b: conv2d_distributed(a, b, mesh,
-                                                     schedule=sched))
-        rep = analyze_hlo(fn.lower(x, w).compile().as_text())
-        out.append({"grid": grid, "algo": algo, "sched": sched,
+    for sched in ["allgather", "ring", "ring2"]:
+        fn = jax.jit(lambda a, b, s=sched: conv2d_distributed(
+            a, b, mesh, schedule=s))
+        compiled = fn.lower(xs, ws).compile()
+        rep = analyze_hlo(compiled.as_text())
+        live = live_bytes(compiled)
+        mem = conv_mem_elems((N,C,H,W), (K,C,kh,kh), grid, schedule=sched)
+        out.append({"name": f"comm/fwd/{algo}", "grid": list(grid),
+                    "schedule": sched,
                     "wire_bytes": rep["total_wire_bytes"],
-                    "counts": rep["coll_counts"]})
-    # fwd+bwd through the custom VJP vs the transposed-schedule accounting
-    def fwd_bwd(a, b):
-        y, vjp = jax.vjp(lambda p, q: conv2d_distributed(p, q, mesh), a, b)
+                    "peak_elems": mem["peak"],
+                    "measured_live_bytes": live,
+                    "wall_ms": wall_ms(compiled, x, w)})
+        def fwd_bwd(a, b, s=sched):
+            y, vjp = jax.vjp(lambda p, q: conv2d_distributed(
+                p, q, mesh, schedule=s), a, b)
+            return vjp(y)
+        cb = jax.jit(fwd_bwd).lower(xs, ws).compile()
+        repb = analyze_hlo(cb.as_text())
+        liveb = live_bytes(cb)
+        memb = conv_train_mem_elems((N,C,H,W), (K,C,kh,kh), grid,
+                                    schedule=sched)
+        analytic = conv_train_comm_elems((N,C,H,W), (K,C,kh,kh), grid,
+                                         schedule=sched)["total"] * 4
+        out.append({"name": f"comm/train/{algo}", "grid": list(grid),
+                    "schedule": sched,
+                    "wire_bytes": repb["total_wire_bytes"],
+                    "analytic_wire_bytes": analytic,
+                    "peak_elems": memb["peak"],
+                    "measured_live_bytes": liveb,
+                    "wall_ms": wall_ms(cb, x, w)})
+    # the memory-for-wire endpoint: residual-saving VJP, allgather sched
+    def fwd_bwd_sg(a, b):
+        y, vjp = jax.vjp(lambda p, q: conv2d_distributed(
+            p, q, mesh, save_gathered=True), a, b)
         return vjp(y)
-    rep = analyze_hlo(jax.jit(fwd_bwd).lower(x, w).compile().as_text())
-    analytic = (conv_train_comm_elems((N,C,H,W), (K,C,kh,kh), grid)["total"]
-                * prob.bytes_per_elem)
-    out.append({"grid": grid, "algo": algo, "sched": "fwd+bwd",
-                "wire_bytes": rep["total_wire_bytes"],
-                "analytic_bytes": analytic,
-                "counts": rep["coll_counts"]})
+    cs = jax.jit(fwd_bwd_sg).lower(xs, ws).compile()
+    reps_ = analyze_hlo(cs.as_text())
+    out.append({"name": f"comm/train-save-gathered/{algo}",
+                "grid": list(grid), "schedule": "allgather",
+                "wire_bytes": reps_["total_wire_bytes"],
+                "analytic_wire_bytes": conv_train_comm_elems(
+                    (N,C,H,W), (K,C,kh,kh), grid,
+                    save_gathered=True)["total"] * 4,
+                "peak_elems": conv_train_mem_elems(
+                    (N,C,H,W), (K,C,kh,kh), grid,
+                    save_gathered=True)["peak"],
+                "measured_live_bytes": live_bytes(cs),
+                "wall_ms": wall_ms(cs, x, w)})
 print("JSON" + json.dumps(out))
 """
 
 
-def run() -> list:
+def _collect(quick: bool) -> list:
     env = dict(os.environ,
                PYTHONPATH=os.path.join(_ROOT, "src") + os.pathsep
                + os.environ.get("PYTHONPATH", ""))
-    proc = subprocess.run([sys.executable, "-c", textwrap.dedent(_BODY)],
+    body = textwrap.dedent(_BODY % {"quick": quick})
+    proc = subprocess.run([sys.executable, "-c", body],
                           env=env, capture_output=True, text=True,
-                          timeout=600)
+                          timeout=1800)
     assert proc.returncode == 0, proc.stderr[-2000:]
     payload = [l for l in proc.stdout.splitlines()
                if l.startswith("JSON")][0][4:]
-    rows = []
-    for rec in json.loads(payload):
-        extra = (f"analytic {rec['analytic_bytes']:.3e}B"
-                 if "analytic_bytes" in rec else "")
-        rows.append((f"comm/{rec['algo']}/{rec['sched']}",
-                     f"{rec['wire_bytes']:.3e}B",
-                     str(rec["grid"]),
-                     extra, ""))
-    return rows
+    return json.loads(payload)
+
+
+def run_json(*, quick: bool = False) -> list:
+    """Records for ``BENCH_comm.json``."""
+    return _collect(quick)

@@ -1,7 +1,13 @@
 """Two-level tiling at the chip level: Pallas kernels with paper-planned
 BlockSpecs — wall time per call (CPU jit; interpret mode for the Pallas
-path, so the derived column reports the MODELED HBM traffic ratio, the
-quantity the paper's Eq. 4 actually optimizes)."""
+path, so the modeled HBM traffic ratio is the meaningful derived column —
+the quantity the paper's Eq. 4 actually optimizes).
+
+``run_json(quick=...)`` returns the ``BENCH_kernels.json`` records
+(schema: ``{name, grid, schedule, wire_bytes, peak_elems, wall_ms}`` —
+``wire_bytes`` here is the modeled HBM<->VMEM traffic of the planned
+tiling, the chip-level analogue of the distributed wire volume, and
+``grid`` carries the block plan)."""
 
 from __future__ import annotations
 
@@ -10,13 +16,12 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core.problem import ConvProblem, resnet50_layers
+from repro.core.problem import resnet50_layers
 from repro.kernels import tiling
 from repro.kernels.ops import conv2d_same
-from repro.kernels.ref import ref_conv2d
 
 
-def _time(fn, *args, reps=3):
+def _time_us(fn, *args, reps=3):
     fn(*args).block_until_ready()
     t0 = time.perf_counter()
     for _ in range(reps):
@@ -25,20 +30,31 @@ def _time(fn, *args, reps=3):
     return (time.perf_counter() - t0) / reps * 1e6
 
 
-def run() -> list:
-    rows = []
+def _records(quick: bool) -> list:
+    recs = []
     key = jax.random.PRNGKey(0)
-    for name, p in list(resnet50_layers(batch=4).items())[:4]:
+    n_layers = 2 if quick else 4
+    for name, p in list(resnet50_layers(batch=4).items())[:n_layers]:
         if p.Nr == 1:
             continue
         x = jax.random.normal(key, (p.Nb, p.Nc, p.Nh, p.Nw), jnp.float32)
         w = jax.random.normal(key, (p.Nk, p.Nc, p.Nr, p.Ns), jnp.float32)
-        t_xla = _time(lambda a, b: conv2d_same(a, b, use_pallas=False), x, w)
+        t_xla = _time_us(lambda a, b: conv2d_same(a, b, use_pallas=False),
+                         x, w)
         plan = tiling.plan_blocks(p)
         naive = tiling.plan_blocks(p, vmem_elems=2 * 128 * 128)
-        ratio = naive.hbm_traffic / plan.hbm_traffic
-        rows.append((f"kernel/{name}", f"{t_xla:.0f}",
-                     f"planned_vs_min_tile_traffic={ratio:.2f}x",
-                     f"blocks=({plan.block_bhw},{plan.block_k},{plan.block_c})",
-                     ""))
-    return rows
+        recs.append({
+            "name": f"kernel/{name}",
+            "grid": [plan.block_bhw, plan.block_k, plan.block_c],
+            "schedule": "paper-plan",
+            "wire_bytes": plan.hbm_traffic * 4,
+            "peak_elems": plan.vmem_elems,
+            "wall_ms": t_xla / 1e3,
+            "min_tile_traffic_ratio": naive.hbm_traffic / plan.hbm_traffic,
+        })
+    return recs
+
+
+def run_json(*, quick: bool = False) -> list:
+    """Records for ``BENCH_kernels.json``."""
+    return _records(quick)

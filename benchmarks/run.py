@@ -1,28 +1,57 @@
 """Benchmark harness — one module per paper table/claim.
 
-Prints ``name,us_per_call,derived`` CSV rows.
+Prints ``name,us_per_call,derived`` CSV rows and persists the perf
+trajectory to ``BENCH_comm.json`` + ``BENCH_kernels.json`` at the repo
+root (schema per record: ``{name, grid, schedule, wire_bytes, peak_elems,
+wall_ms}`` plus module-specific extras).  The JSON files are checked in
+as the regression baseline: future PRs diff their wire/peak fields (exact
+analytic/HLO quantities; ``wall_ms``/``measured_live_bytes`` are
+machine-dependent and informational).
 
   table12       Table 1/2 closed-form costs vs integer solver (the paper's
                 central analytic result)
-  comm          2D vs 2.5D vs 3D collective bytes, analytic vs HLO
+  comm          2D vs 2.5D vs 3D collective bytes + peak live memory across
+                the allgather/ring/ring2 schedules, analytic vs HLO
                 (Sec. 2.2 cost analysis)
   kernel        chip-level two-level tiling (Eq. 4 at VMEM scale)
   sharding      synthesizer-as-sharding-engine across the 10 assigned archs
+
+``--quick`` is the CI smoke mode: fewer grids/layers/reps, skips the
+sharding sweep, still writes both JSON files.
 """
 
 from __future__ import annotations
 
+import argparse
+import json
+import os
 import sys
 import traceback
 
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+# runnable both as `python benchmarks/run.py` and `python -m benchmarks.run`
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke mode: fewer grids/reps, skip the "
+                         "sharding sweep")
+    ap.add_argument("--out-dir", default=_ROOT,
+                    help="where to write BENCH_*.json (default: repo root)")
+    args = ap.parse_args()
+
     from benchmarks import (bench_comm_volume, bench_cost_model,
                             bench_kernels, bench_sharding)
-    mods = [("cost_model", bench_cost_model),
-            ("comm_volume", bench_comm_volume),
-            ("kernels", bench_kernels),
-            ("sharding", bench_sharding)]
+    # comm/kernels print their rows from the JSON records below — no
+    # second (CSV-only) benchmarking pass
+    mods = [("cost_model", bench_cost_model)]
+    if not args.quick:
+        mods.append(("sharding", bench_sharding))
+
     print("name,us_per_call,derived")
     failed = 0
     for name, mod in mods:
@@ -32,6 +61,25 @@ def main() -> None:
         except Exception:
             failed += 1
             print(f"{name},ERROR,", file=sys.stderr)
+            traceback.print_exc()
+
+    for fname, fn in [("BENCH_comm.json", bench_comm_volume.run_json),
+                      ("BENCH_kernels.json", bench_kernels.run_json)]:
+        try:
+            recs = fn(quick=args.quick)
+            path = os.path.join(args.out_dir, fname)
+            with open(path, "w") as f:
+                json.dump(recs, f, indent=1, sort_keys=True)
+                f.write("\n")
+            for rec in recs:
+                print(f"{rec['name']}/{rec['schedule']},"
+                      f"{rec['wall_ms'] * 1e3:.0f},"
+                      f"wire={rec['wire_bytes']:.3e}B,"
+                      f"peak={rec['peak_elems']:.3e}el")
+            print(f"# wrote {path} ({len(recs)} records)", file=sys.stderr)
+        except Exception:
+            failed += 1
+            print(f"{fname},ERROR,", file=sys.stderr)
             traceback.print_exc()
     if failed:
         sys.exit(1)

@@ -5,6 +5,12 @@ forward pass and for a full fwd+bwd train step (the dist ops carry custom
 VJPs that transpose the communication schedule: gathers to reduce-scatters,
 the c-axis all-reduce to a broadcast, halo exchange to halo accumulation).
 
+Alongside the wire story, the peak-memory story: the analytic per-device
+peak-live accounting (``conv_mem_elems``) next to the compiled per-device
+live bytes, across all three schedules — ``ring2`` (both operands
+pipelined, nothing gathered) should be the smallest on every grid it
+supports, at identical wire volume.
+
 Run:  PYTHONPATH=src python examples/distributed_conv_demo.py
 """
 
@@ -19,8 +25,9 @@ from jax import lax
 from repro.core import ConvProblem, comm_volume, grid_from_tuple
 from repro.core.sharding_synthesis import synthesize_dist_grid
 from repro.dist.conv2d import (conv2d_distributed, conv_comm_elems,
-                               conv_train_comm_elems, make_conv_mesh)
-from repro.launch.hlo_analysis import analyze_hlo
+                               conv_mem_elems, conv_train_comm_elems,
+                               make_conv_mesh)
+from repro.launch.hlo_analysis import analyze_hlo, live_bytes
 
 key = jax.random.PRNGKey(0)
 # batch 8 so the pure-DP grid (8,1,1,1,1) divides the batch dim
@@ -33,8 +40,10 @@ ref = lax.conv_general_dilated(x, w, (1, 1), "SAME",
 prob = ConvProblem.from_conv_layer(batch=N, cin=C, cout=K, h=H, w=W,
                                    kh=kh, kw=kh, bytes_per_elem=4)
 
+
 print(f"{'grid (b,h,w,k,c)':20s} {'schedule':10s} {'max err':>9s} "
-      f"{'HLO wire bytes':>14s} {'analytic':>10s} {'cost_C':>10s}")
+      f"{'HLO wire B':>11s} {'analytic':>9s} {'cost_C':>9s} "
+      f"{'peak B':>9s} {'live B':>8s}")
 for grid, label in [
     ((8, 1, 1, 1, 1), "2D pure-DP"),
     ((2, 1, 1, 4, 1), "2D SUMMA"),
@@ -46,22 +55,26 @@ for grid, label in [
     # "analytic" = per-device wire volume of the runtime schedule itself
     # (what the HLO column should reproduce); "cost_C" = the paper's Eq. 10
     # compute-phase comm for the same grid (init scatter excluded — inputs
-    # start sharded)
+    # start sharded); "peak" = analytic per-device peak-live bytes,
+    # "live" = the compiled program's argument+temp+output bytes
     analytic_bytes = (conv_comm_elems(x.shape, w.shape, grid)["total"]
                       * prob.bytes_per_elem)
     cv = comm_volume(prob, grid_from_tuple(prob, grid))
     cost_c_bytes = (cv.bcast_in + cv.bcast_ker + cv.reduce_out
                     + cv.halo) * prob.bytes_per_elem
-    for sched in ["allgather", "ring"]:
+    for sched in ["allgather", "ring", "ring2"]:
         fn = jax.jit(lambda a, b: conv2d_distributed(a, b, mesh,
                                                      schedule=sched))
         compiled = fn.lower(x, w).compile()  # one compile: run + HLO text
         out = compiled(x, w)
         err = float(jnp.max(jnp.abs(out - ref)))
         rep = analyze_hlo(compiled.as_text())
+        peak_b = conv_mem_elems(x.shape, w.shape, grid,
+                                schedule=sched)["peak"] * prob.bytes_per_elem
         print(f"{str(grid):20s} {sched:10s} {err:9.1e} "
-              f"{rep['total_wire_bytes']:14.3e} "
-              f"{analytic_bytes:10.3e} {cost_c_bytes:10.3e}   # {label}")
+              f"{rep['total_wire_bytes']:11.3e} "
+              f"{analytic_bytes:9.2e} {cost_c_bytes:9.2e} "
+              f"{peak_b:9.2e} {live_bytes(compiled):8d}   # {label}")
         assert err < 1e-3
 print("\nall grids/schedules match the XLA conv oracle")
 
@@ -70,25 +83,37 @@ print("\nall grids/schedules match the XLA conv oracle")
 # transposed-schedule accounting (bwd replays the gathers, reduce-scatters
 # the operand gradients, halo-accumulates; the c all-reduce transposes to a
 # free broadcast) — conv_train_comm_elems should reproduce the HLO exactly.
+# save_gathered=True is the other endpoint: the gathered operands are saved
+# as residuals, so the replay terms vanish from the wire (and reappear as
+# resident memory).
 # ---------------------------------------------------------------------------
-print(f"\n{'grid (b,h,w,k,c)':20s} {'fwd+bwd HLO':>14s} {'analytic':>10s} "
-      f"{'ratio':>6s}")
+print(f"\n{'grid (b,h,w,k,c)':20s} {'variant':16s} {'fwd+bwd HLO':>12s} "
+      f"{'analytic':>10s} {'ratio':>6s} {'live B':>8s}")
 for grid in [(2, 1, 1, 2, 2), (1, 2, 2, 2, 1), (2, 2, 1, 1, 2)]:
     mesh = make_conv_mesh(grid)
+    for sg, label in [(False, "remat"), (True, "save_gathered")]:
 
-    def fwd_bwd(a, b):
-        out, vjp = jax.vjp(lambda p, q: conv2d_distributed(p, q, mesh), a, b)
-        return vjp(out)
+        def fwd_bwd(a, b, sg=sg):
+            out, vjp = jax.vjp(lambda p, q: conv2d_distributed(
+                p, q, mesh, save_gathered=sg), a, b)
+            return vjp(out)
 
-    rep = analyze_hlo(jax.jit(fwd_bwd).lower(x, w).compile().as_text())
-    v = conv_train_comm_elems(x.shape, w.shape, grid)
-    analytic = v["total"] * prob.bytes_per_elem
-    ratio = rep["total_wire_bytes"] / analytic
-    print(f"{str(grid):20s} {rep['total_wire_bytes']:14.3e} "
-          f"{analytic:10.3e} {ratio:6.2f}")
-    assert 0.9 < ratio < 1.1
+        compiled = jax.jit(fwd_bwd).lower(x, w).compile()
+        rep = analyze_hlo(compiled.as_text())
+        v = conv_train_comm_elems(x.shape, w.shape, grid, save_gathered=sg)
+        analytic = v["total"] * prob.bytes_per_elem
+        ratio = rep["total_wire_bytes"] / analytic
+        print(f"{str(grid):20s} {label:16s} {rep['total_wire_bytes']:12.3e} "
+              f"{analytic:10.3e} {ratio:6.2f} {live_bytes(compiled):8d}")
+        assert 0.9 < ratio < 1.1
 
 choice = synthesize_dist_grid(x.shape, w.shape, 8, train=True)
 print(f"\nsynthesized train grid for 8 devices: {choice.grid} "
-      f"({choice.algo}), fwd+bwd {choice.comm_elems['total']:.3e} elems/dev")
+      f"({choice.algo}), fwd+bwd {choice.comm_elems['total']:.3e} elems/dev, "
+      f"peak {choice.mem_elems:.3e} elems/dev")
+capped = synthesize_dist_grid(x.shape, w.shape, 8, train=True,
+                              schedule="ring2",
+                              mem_cap_elems=choice.mem_elems)
+print(f"under a {choice.mem_elems:.3e}-elem cap with ring2: {capped.grid} "
+      f"({capped.algo}), peak {capped.mem_elems:.3e} elems/dev")
 print("fwd+bwd collective bytes match the transposed-schedule accounting")

@@ -17,6 +17,7 @@ from repro.core.cost_model import (
     cost_sequential,
     cost_simplified,
     memory_distributed,
+    memory_distributed_train,
     ml_from_m,
     simulate_tiled_movement,
     tile_footprint,
@@ -54,7 +55,8 @@ __all__ = [
     "cost_sequential", "cost_global_memory", "cost_global_memory_exact",
     "cost_simplified", "cost_distributed_init", "cost_distributed_comm",
     "cost_distributed_total", "cost_distributed_bwd",
-    "cost_distributed_train", "memory_distributed", "ml_from_m",
+    "cost_distributed_train", "memory_distributed",
+    "memory_distributed_train", "ml_from_m",
     "tile_footprint", "simulate_tiled_movement",
     "solve", "solve_closed_form", "brute_force", "table1_cost", "table2_cost",
     "synthesize", "comm_volume", "compare_algorithms", "grid_from_tuple",

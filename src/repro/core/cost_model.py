@@ -220,6 +220,24 @@ def memory_distributed(p: ConvProblem, P: int, c: TileChoice) -> float:
     return in_tile + ker_tile + resident
 
 
+def memory_distributed_train(p: ConvProblem, P: int, c: TileChoice) -> float:
+    """Eq. 11 extended to a training step: the backward pass additionally
+    holds the Out cotangent (``Wbhw*Wk``, replicated like Out) and one
+    gradient buffer per operand shard (dIn + dKer mirror the initial
+    distribution).  Tile buffers are shared between the passes, so
+
+        g_T = g_D + Wbhw*Wk + (size(In) + size(Ker)) / P.
+
+    This is the model-level counterpart of the runtime
+    ``repro.dist.conv_train_mem_elems`` peak; the synthesizer's
+    ``mem_cap_elems`` filter uses the runtime accounting (exact halo /
+    schedule terms), this closed form serves the paper-style analysis.
+    """
+    return (memory_distributed(p, P, c)
+            + c.Wbhw * c.Wk
+            + (p.size_in() + p.size_ker()) / P)
+
+
 # --------------------------------------------------------------------------
 # Simulation oracle: count data movement of an actual tiled execution
 # --------------------------------------------------------------------------

@@ -131,6 +131,7 @@ class DistGridChoice:
     algo: str                              # 2D / 2.5D / 3D analogue
     model_cost: float                      # cost_model objective (elements)
     comm_elems: Dict                       # runtime wire accounting
+    mem_elems: float = 0.0                 # runtime peak-live accounting
 
 
 def _algo_family(grid: Tuple[int, int, int, int, int]) -> str:
@@ -157,7 +158,10 @@ def _factorizations(P: int, axes: int):
 
 def synthesize_dist_grid(x_shape, w_shape, n_devices: int, *,
                          stride=(1, 1), padding="SAME",
-                         train: bool = True) -> DistGridChoice:
+                         train: bool = True,
+                         schedule: str = "allgather",
+                         mem_cap_elems: Optional[float] = None
+                         ) -> DistGridChoice:
     """Choose the ``(Pb, Ph, Pw, Pk, Pc)`` grid for ``repro.dist``.
 
     Enumerates every factorization of ``n_devices`` over the five conv
@@ -167,11 +171,19 @@ def synthesize_dist_grid(x_shape, w_shape, n_devices: int, *,
     distributed cost — ``cost_distributed_train`` (fwd + dIn + dKer) when
     ``train`` else ``cost_distributed_total`` — with the runtime
     ``conv_train_comm_elems`` total as tie-break.
+
+    ``mem_cap_elems`` optimizes under a per-device memory cap: grids whose
+    runtime peak-live accounting (``conv_train_mem_elems`` /
+    ``conv_mem_elems`` for ``schedule``) exceeds the cap are discarded —
+    the 2.5D/3D memory-for-wire tradeoff as a hard constraint.  The
+    ``ring2`` schedule, never materializing a gathered operand, admits
+    grids the gather schedules cannot fit.
     """
     from repro.core.grid import grid_from_tuple
     from repro.dist.conv2d import (_pad_amounts, conv_comm_elems,
-                                   conv_grid_divides,
-                                   conv_train_comm_elems)
+                                   conv_grid_divides, conv_mem_elems,
+                                   conv_train_comm_elems,
+                                   conv_train_mem_elems)
 
     if isinstance(stride, int):
         stride = (stride, stride)
@@ -187,6 +199,7 @@ def synthesize_dist_grid(x_shape, w_shape, n_devices: int, *,
 
     best: Optional[DistGridChoice] = None
     best_key = None
+    capped_out = 0
     for grid in _factorizations(n_devices, 5):
         if not conv_grid_divides(x_shape, w_shape, grid, stride=stride,
                                  padding=padding):
@@ -196,21 +209,34 @@ def synthesize_dist_grid(x_shape, w_shape, n_devices: int, *,
             model_cost = cost_model.cost_distributed_train(
                 p, n_devices, choice)
             elems = conv_train_comm_elems(x_shape, w_shape, grid,
-                                          stride=stride, padding=padding)
+                                          stride=stride, padding=padding,
+                                          schedule=schedule)
+            mem = conv_train_mem_elems(x_shape, w_shape, grid,
+                                       stride=stride, padding=padding,
+                                       schedule=schedule)["peak"]
         else:
             model_cost = cost_model.cost_distributed_total(
                 p, n_devices, choice)
             elems = conv_comm_elems(x_shape, w_shape, grid, stride=stride,
                                     padding=padding)
+            mem = conv_mem_elems(x_shape, w_shape, grid, stride=stride,
+                                 padding=padding, schedule=schedule)["peak"]
+        if mem_cap_elems is not None and mem > mem_cap_elems:
+            capped_out += 1
+            continue
         key = (model_cost, elems["total"], grid)
         if best_key is None or key < best_key:
             best_key = key
             best = DistGridChoice(grid=grid, algo=_algo_family(grid),
-                                  model_cost=model_cost, comm_elems=elems)
+                                  model_cost=model_cost, comm_elems=elems,
+                                  mem_elems=mem)
     if best is None:
+        detail = (f" under mem cap {mem_cap_elems:.3e} elems "
+                  f"({capped_out} grids over cap)"
+                  if mem_cap_elems is not None and capped_out else "")
         raise ValueError(
             f"no (Pb,Ph,Pw,Pk,Pc) factorization of {n_devices} devices "
-            f"divides conv x{tuple(x_shape)} w{tuple(w_shape)}")
+            f"divides conv x{tuple(x_shape)} w{tuple(w_shape)}{detail}")
     return best
 
 

@@ -7,12 +7,47 @@ Grid tuple conventions:
 * conv:   ``(Pb, Ph, Pw, Pk, Pc)`` over mesh axes ``("b","h","w","k","c")``
 * matmul: ``(Pm, Pn, Pc)``         over mesh axes ``("m","n","c")``
 
+Schedule tradeoffs (per device; "slab"/"chunk" = one rank's contraction
+sub-shard of In / Ker, g = ring size; wire volumes are identical because
+each piece crosses its ring exactly once however it is pipelined):
+
+=========== ======================= ============================ =============
+schedule    wire (contraction ops)  peak operand memory          latency shape
+=========== ======================= ============================ =============
+allgather   slab*(g-1) + chunk*(g-1) both operands gathered       1 collective
+                                     (g slabs + g chunks)         per operand
+ring        same                     Ker gathered (g chunks),     g pipelined
+                                     In streams (O(1) slabs)      steps
+ring2       same                     nothing gathered: O(1)       g pipelined
+                                     slabs + O(1) chunks          steps, 2
+                                                                  contractions
+                                                                  per step on
+                                                                  the zip path
+=========== ======================= ============================ =============
+
+``ring2`` additionally shrinks the backward spatial psum of dKer by
+``1/Pb`` (the chunk is scattered before the reduce).  It covers grids
+where one contraction ring is trivial or both have size 2
+(``conv_ring2_supported`` / ``matmul_ring2_supported``) and falls back to
+``ring`` elsewhere — larger double rings would need a Cannon alignment
+skew costing an extra wire hop per operand (see ``dist.conv2d``).
+
 Every op is differentiable: ``conv2d_distributed``, ``matmul_distributed``,
 ``halo_exchange_1d`` and ``pipelined_apply`` carry custom VJPs whose
 backward passes transpose the forward communication structure (gathers to
 reduce-scatters, the c-axis all-reduce to a broadcast, halo exchange to
 halo accumulation), so ``jax.grad`` of a model built on them runs the
-paper's fwd+bwd schedule end to end (see ``dist/train.py``).
+paper's fwd+bwd schedule end to end (see ``dist/train.py``).  The custom
+VJPs rematerialize the forward gathers (communication-optimal memory);
+``save_gathered=True`` differentiates natively instead, saving the
+gathered operands as residuals and paying zero gather-replay wire.
+``conv_mem_elems`` / ``matmul_mem_elems`` (+ ``*_train_*`` variants) give
+the analytic per-device peak-live accounting of both endpoints, alongside
+the ``*_comm_elems`` wire accounting.
+
+Per-step local contractions dispatch through ``repro.kernels.ops``
+(Pallas tiled kernels with memoized paper plans where the shapes tile,
+XLA otherwise; ``REPRO_DIST_PALLAS=0`` forces XLA).
 
 Importing this package also installs a version-tolerant ``jax.shard_map``
 alias on JAX builds that only export the experimental spelling.
@@ -26,6 +61,8 @@ from repro.dist.collectives import (
     ring_all_gather,
     ring_reduce,
     ring_reduce_scatter,
+    ring_scatter_reduce,
+    ring_zip,
     scatter_axis,
 )
 from repro.dist.compress import compressed_psum, compressed_psum_tree
@@ -33,7 +70,10 @@ from repro.dist.conv2d import (
     conv2d_distributed,
     conv_comm_elems,
     conv_grid_divides,
+    conv_mem_elems,
+    conv_ring2_supported,
     conv_train_comm_elems,
+    conv_train_mem_elems,
     make_conv_mesh,
 )
 from repro.dist.halo import halo_accumulate_1d, halo_exchange_1d
@@ -42,8 +82,11 @@ from repro.dist.matmul import (
     matmul_comm_elems,
     matmul_distributed,
     matmul_grid_divides,
+    matmul_mem_elems,
     matmul_mesh_from_conv,
+    matmul_ring2_supported,
     matmul_train_comm_elems,
+    matmul_train_mem_elems,
 )
 from repro.dist.pipeline import pipelined_apply
 
@@ -54,7 +97,8 @@ install_jax_alias()
 # lazily so importing the primitives package neither pulls in the whole
 # training stack nor risks a circular import.
 _TRAIN_EXPORTS = ("make_grid_train_step", "init_grid_train_state",
-                  "cnn_train_comm_elems", "grid_divides_cnn")
+                  "cnn_train_comm_elems", "cnn_train_mem_elems",
+                  "grid_divides_cnn")
 
 
 def __getattr__(name):
@@ -65,14 +109,17 @@ def __getattr__(name):
 
 __all__ = [
     "SCHEDULES", "shard_map", "gather_axis", "ring_all_gather",
-    "ring_reduce", "ring_reduce_scatter", "scatter_axis", "make_mesh",
+    "ring_reduce", "ring_reduce_scatter", "ring_scatter_reduce",
+    "ring_zip", "scatter_axis", "make_mesh",
     "conv2d_distributed", "make_conv_mesh", "conv_comm_elems",
-    "conv_train_comm_elems", "conv_grid_divides",
+    "conv_train_comm_elems", "conv_grid_divides", "conv_mem_elems",
+    "conv_train_mem_elems", "conv_ring2_supported",
     "matmul_distributed", "make_matmul_mesh", "matmul_comm_elems",
-    "matmul_train_comm_elems", "matmul_grid_divides",
+    "matmul_train_comm_elems", "matmul_grid_divides", "matmul_mem_elems",
+    "matmul_train_mem_elems", "matmul_ring2_supported",
     "matmul_mesh_from_conv",
     "halo_exchange_1d", "halo_accumulate_1d", "pipelined_apply",
     "compressed_psum", "compressed_psum_tree",
     "make_grid_train_step", "init_grid_train_state",
-    "cnn_train_comm_elems", "grid_divides_cnn",
+    "cnn_train_comm_elems", "cnn_train_mem_elems", "grid_divides_cnn",
 ]

@@ -1,6 +1,6 @@
 """Schedule-selectable gather primitives shared by the distributed ops.
 
-Two implementations of the same logical all-gather over a mesh axis:
+Three schedules for the same logical contraction-operand movement:
 
 * ``"allgather"`` — one ``lax.all_gather`` collective (XLA picks the
   algorithm; on most backends this is already a ring).
@@ -9,10 +9,15 @@ Two implementations of the same logical all-gather over a mesh axis:
   against.  Same wire volume (``shard * (g-1)``), but each step is an
   independent neighbour message that the conv/matmul inner loops can overlap
   with partial contractions.
+* ``"ring2"``     — the two-ring pipelined schedule: *both* contraction
+  operands rotate around their respective rings (:func:`ring_zip`), so no
+  rank ever materializes a gathered operand.  Same wire volume again; peak
+  live memory drops from gathered-size to slab-size.  See
+  ``repro.dist.conv2d`` / ``repro.dist.matmul`` for the supported grids.
 
-Both return the gathered array with shards concatenated in *global rank
+The gather/scatter primitives return shards concatenated in *global rank
 order* along ``dim``, so downstream slicing by source rank is
-position-stable.  Must be called inside ``shard_map``.
+position-stable.  Everything here must be called inside ``shard_map``.
 """
 
 from __future__ import annotations
@@ -25,7 +30,7 @@ import numpy as np
 from jax import lax
 from jax.sharding import Mesh
 
-SCHEDULES = ("allgather", "ring")
+SCHEDULES = ("allgather", "ring", "ring2")
 
 
 def make_mesh(grid, axes) -> Mesh:
@@ -47,16 +52,115 @@ def ring_reduce(x, axis_name: str, body, init):
     ``acc = body(acc, src, shard)`` once per rank, where ``src`` is the
     (traced) rank index whose shard has just arrived.  All ring
     bookkeeping (neighbour permutation, source-rank tracking) lives here
-    so the pipelined conv/matmul schedules share one copy of it."""
+    so the pipelined conv/matmul schedules share one copy of it.
+
+    Rings of size >= 3 run as a ``fori_loop`` so only one rotating buffer
+    exists: unrolled, the ppermute chain depends only on itself and XLA's
+    latency-hiding scheduler hoists every hop ahead of the compute,
+    keeping all ``g`` shards live at once — the gathered footprint the
+    pipelined schedules exist to avoid."""
     g = lax.psum(1, axis_name)
     me = lax.axis_index(axis_name)
     perm = [(i, (i + 1) % g) for i in range(g)]
-    cur, acc = x, init
-    for step in range(g):
-        acc = body(acc, (me - step) % g, cur)
-        if step < g - 1:
+    acc = body(init, me % g, x)
+    if g <= 2:
+        cur = x
+        for step in range(1, g):
             cur = lax.ppermute(cur, axis_name, perm)
+            acc = body(acc, (me - step) % g, cur)
+        return acc
+
+    def step(t, carry):
+        cur, a = carry
+        cur = lax.ppermute(cur, axis_name, perm)
+        return cur, body(a, (me - t - 1) % g, cur)
+
+    _, acc = lax.fori_loop(0, g - 1, step, (x, acc))
     return acc
+
+
+def ring_zip(a, axis_a: str, b, axis_b: str, body, init=None):
+    """Rotate ``a`` around ``axis_a`` and ``b`` around ``axis_b`` in lockstep
+    and fold the co-resident pieces:
+
+        acc = body(acc, step, src_a, cur_a, src_b, cur_b)
+
+    once per step for ``max(ga, gb)`` steps, where ``src_a``/``src_b`` are
+    the (traced) rank indices whose shards are currently resident.  A ring
+    of size 1 never rotates (its ``cur`` is the local shard throughout), so
+    the degenerate cases collapse to a one-ring stream against a stationary
+    operand.  ``body`` may return its first accumulator from ``acc=init``
+    (``None`` supported, as in :func:`ring_reduce`).
+
+    This is the two-ring primitive of the ``"ring2"`` schedule: per-device
+    wire volume is exactly ``|a_shard|*(ga-1) + |b_shard|*(gb-1)`` — the
+    same as gathering each operand — but only one piece of each operand is
+    in flight at a time (double-buffered by XLA's ppermute), never the
+    gathered whole.
+
+    Ring sizes must be equal or trivial (``ga == gb`` or ``min == 1``):
+    with ``1 < ga < gb`` the shorter ring stops rotating mid-zip and the
+    reported ``src`` index would no longer describe the resident piece.
+    """
+    ga, gb = lax.psum(1, axis_a), lax.psum(1, axis_b)
+    if not (ga == gb or ga == 1 or gb == 1):
+        raise ValueError(f"ring_zip needs equal or trivial ring sizes, "
+                         f"got {ga} x {gb}")
+    ia, ib = lax.axis_index(axis_a), lax.axis_index(axis_b)
+    perm_a = [(i, (i + 1) % ga) for i in range(ga)]
+    perm_b = [(i, (i + 1) % gb) for i in range(gb)]
+    steps = max(ga, gb)
+    cur_a, cur_b, acc = a, b, init
+    for t in range(steps):
+        acc = body(acc, t, (ia - t) % ga, cur_a, (ib - t) % gb, cur_b)
+        if t < steps - 1:
+            if t < ga - 1:
+                cur_a = lax.ppermute(cur_a, axis_a, perm_a)
+            if t < gb - 1:
+                cur_b = lax.ppermute(cur_b, axis_b, perm_b)
+    return acc
+
+
+def ring_scatter_reduce(axis_name: str, produce):
+    """Ring reduce-scatter with on-the-fly chunk production — the transpose
+    of :func:`ring_reduce`.
+
+    ``produce(r, step)`` returns this rank's additive contribution to the
+    chunk that must end on rank ``r`` (``r`` traced; ``step`` is static
+    for rings of size <= 2 and traced inside the ``fori_loop`` beyond).
+    The token for chunk ``r`` starts on rank ``r + 1`` and travels the
+    whole ring, accumulating every rank's contribution, arriving home
+    after ``g - 1`` hops; the return value is the fully reduced own chunk.
+    Wire volume is ``chunk * (g - 1)`` per device — the same as
+    :func:`ring_reduce_scatter` of the materialized concatenation, without
+    ever materializing it.  Like :func:`ring_reduce`, rings of size >= 3
+    run as a ``fori_loop``: unrolled, the productions are independent of
+    the token carry and XLA's scheduler would hoist all ``g`` of them
+    ahead of the hops, materializing the gathered-size footprint this
+    primitive exists to avoid.
+    """
+    g = lax.psum(1, axis_name)
+    me = lax.axis_index(axis_name)
+    cur = produce((me - 1) % g, 0)
+    if g == 1:
+        return cur
+    perm = [(i, (i + 1) % g) for i in range(g)]
+    if g == 2:
+        cur = lax.ppermute(cur, axis_name, perm)
+        return cur + produce(me % g, 1)
+
+    def step(t, tok):
+        tok = lax.ppermute(tok, axis_name, perm)
+        return tok + produce((me - 2 - t) % g, t + 1)
+
+    return lax.fori_loop(0, g - 1, step, cur)
+
+
+def stream_elems(g: int, unit: float) -> float:
+    """Transient footprint model of a ring stream: the in-flight piece
+    plus the ppermute double buffer (only one piece total when the ring is
+    a single hop).  Shared by the conv/matmul peak-live accounting."""
+    return min(2, g - 1) * unit if g > 1 else 0.0
 
 
 def ring_all_gather(x, axis_name: str, *, dim: int):
@@ -81,7 +185,7 @@ def gather_axis(x, axis_name: str, *, dim: int, schedule: str):
     if schedule not in SCHEDULES:
         raise ValueError(f"schedule must be one of {SCHEDULES}, "
                          f"got {schedule!r}")
-    if schedule == "ring":
+    if schedule in ("ring", "ring2"):
         return ring_all_gather(x, axis_name, dim=dim)
     return lax.all_gather(x, axis_name, axis=dim, tiled=True)
 
@@ -122,6 +226,6 @@ def scatter_axis(x, axis_name: str, *, dim: int, schedule: str):
     if schedule not in SCHEDULES:
         raise ValueError(f"schedule must be one of {SCHEDULES}, "
                          f"got {schedule!r}")
-    if schedule == "ring":
+    if schedule in ("ring", "ring2"):
         return ring_reduce_scatter(x, axis_name, dim=dim)
     return lax.psum_scatter(x, axis_name, scatter_dimension=dim, tiled=True)

@@ -24,7 +24,12 @@ gather moves ``n*(g-1)`` bytes per device vs ``8n*(g-1)/g`` for the f32
 all-reduce — a factor-``8/g`` saving that breaks even at ``g = 8``, so
 for axis sizes >= 8 the s8 path automatically degrades to the f32
 all-reduce (compression then only buys the quantized numerics, not
-wire).  ``wire="f32"`` forces the old model-only behaviour (``lax.pmean``
+wire).  The break-even is the same ring model ``make bench`` persists to
+``BENCH_comm.json`` (wire bytes from ``launch.hlo_analysis`` on compiled
+HLO) — check the actual saving against that baseline rather than any
+hand-measured number; ``tests/test_dist_vjps.py::
+test_compressed_psum_s8_on_the_wire`` pins the ~4x factor on a 2-rank
+axis.  ``wire="f32"`` forces the old model-only behaviour (``lax.pmean``
 of the dequantized tensor); the two paths compute the same mean up to
 floating-point reduction order (they transmit identical quantized
 values).  These functions must run inside ``shard_map``/``pmap`` with

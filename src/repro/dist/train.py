@@ -30,9 +30,10 @@ from typing import Callable, Dict, List, Optional, Tuple
 from jax.sharding import Mesh
 
 from repro.dist.conv2d import (AXES, conv_grid_divides,
-                               conv_train_comm_elems)
+                               conv_train_comm_elems, conv_train_mem_elems)
 from repro.dist.matmul import (matmul_grid_divides, matmul_mesh_from_conv,
-                               matmul_train_comm_elems)
+                               matmul_train_comm_elems,
+                               matmul_train_mem_elems)
 from repro.models.cnn import loss_cnn
 from repro.train.optim import AdamW
 from repro.train.step import TrainState, init_train_state, make_train_step
@@ -40,19 +41,24 @@ from repro.train.step import TrainState, init_train_state, make_train_step
 
 def make_grid_train_step(optimizer: AdamW, mesh: Mesh, *,
                          schedule: str = "allgather",
+                         save_gathered: bool = False,
                          pool_every: int = 2,
                          n_microbatches: int = 1,
                          loss_fn: Optional[Callable] = None) -> Callable:
     """Train step (``(state, batch) -> (state, metrics)``) for the CNN on
     an explicit 5-axis conv mesh.
 
-    ``loss_fn(params, batch, dist_mesh=..., dist_schedule=...)`` may be
-    supplied to train a different model through the dist ops; it defaults
-    to ``models.cnn.loss_cnn``.
+    ``schedule`` picks the dist-op schedule (``allgather`` / ``ring`` /
+    ``ring2``); ``save_gathered=True`` trades backward memory for zero
+    gather-replay wire.  ``loss_fn(params, batch, dist_mesh=...,
+    dist_schedule=..., dist_save_gathered=...)`` may be supplied to train
+    a different model through the dist ops; it defaults to
+    ``models.cnn.loss_cnn``.
     """
     base = loss_fn if loss_fn is not None else functools.partial(
         loss_cnn, pool_every=pool_every)
-    loss = functools.partial(base, dist_mesh=mesh, dist_schedule=schedule)
+    loss = functools.partial(base, dist_mesh=mesh, dist_schedule=schedule,
+                             dist_save_gathered=save_gathered)
     return make_train_step(loss, optimizer,
                            n_microbatches=n_microbatches, mode="dist-grid")
 
@@ -77,7 +83,9 @@ def _cnn_layer_shapes(x_shape, channels: List[int], *, k: int,
 
 
 def cnn_train_comm_elems(x_shape, channels: List[int], n_classes: int,
-                         grid, *, k: int = 3, pool_every: int = 2) -> Dict:
+                         grid, *, k: int = 3, pool_every: int = 2,
+                         schedule: str = "allgather",
+                         save_gathered: bool = False) -> Dict:
     """Analytic per-device fwd+bwd wire volume (elements) of the dist ops
     in one CNN train step on ``grid = (Pb, Ph, Pw, Pk, Pc)`` — one entry
     per conv layer plus the head matmul (0 when its shapes don't divide
@@ -89,12 +97,15 @@ def cnn_train_comm_elems(x_shape, channels: List[int], n_classes: int,
     layers = []
     for xs, ws in _cnn_layer_shapes(x_shape, channels, k=k,
                                     pool_every=pool_every):
-        layers.append(conv_train_comm_elems(xs, ws, grid))
+        layers.append(conv_train_comm_elems(xs, ws, grid,
+                                            schedule=schedule,
+                                            save_gathered=save_gathered))
     pb, ph, pw, pk, pc = grid
     mm_grid = (pb * ph * pw, pk, pc)
     N, cin = x_shape[0], channels[-1]
     if matmul_grid_divides(N, cin, n_classes, mm_grid):
-        head = matmul_train_comm_elems(N, cin, n_classes, mm_grid)
+        head = matmul_train_comm_elems(N, cin, n_classes, mm_grid,
+                                       save_gathered=save_gathered)
     else:
         head = {"fwd": {"total": 0.0}, "bwd": {"total": 0.0}, "total": 0.0}
     total = sum(l["total"] for l in layers) + head["total"]
@@ -103,6 +114,34 @@ def cnn_train_comm_elems(x_shape, channels: List[int], n_classes: int,
             + head["fwd"]["total"],
             "bwd_total": sum(l["bwd"]["total"] for l in layers)
             + head["bwd"]["total"]}
+
+
+def cnn_train_mem_elems(x_shape, channels: List[int], n_classes: int,
+                        grid, *, k: int = 3, pool_every: int = 2,
+                        schedule: str = "allgather",
+                        save_gathered: bool = False) -> Dict:
+    """Analytic per-device peak live memory (elements) of the dist ops in
+    one CNN train step: the per-layer peaks (``conv_train_mem_elems`` /
+    ``matmul_train_mem_elems``) and their max — layers execute one after
+    another, so the step peak is the worst layer, not the sum."""
+    if len(grid) != 5:
+        raise ValueError(f"conv grid must be (Pb,Ph,Pw,Pk,Pc), got {grid}")
+    layers = []
+    for xs, ws in _cnn_layer_shapes(x_shape, channels, k=k,
+                                    pool_every=pool_every):
+        layers.append(conv_train_mem_elems(xs, ws, grid, schedule=schedule,
+                                           save_gathered=save_gathered))
+    pb, ph, pw, pk, pc = grid
+    mm_grid = (pb * ph * pw, pk, pc)
+    N, cin = x_shape[0], channels[-1]
+    if matmul_grid_divides(N, cin, n_classes, mm_grid):
+        head = matmul_train_mem_elems(N, cin, n_classes, mm_grid,
+                                      schedule=schedule,
+                                      save_gathered=save_gathered)
+    else:
+        head = {"peak": 0.0}
+    peak = max([l["peak"] for l in layers] + [head["peak"]])
+    return {"layers": layers, "head": head, "peak": peak}
 
 
 def grid_divides_cnn(x_shape, channels: List[int], grid, *, k: int = 3,

@@ -50,16 +50,29 @@ def _conv_kernel(x_ref, w_ref, o_ref, acc_ref, *, n_c: int, kh: int, kw: int):
 
 def conv2d_pallas(x: jax.Array, w: jax.Array, *, block_b: int = 8,
                   block_k: int = 128, block_c: int = 128,
+                  padding: str = "SAME",
                   interpret: bool = False) -> jax.Array:
-    """stride-1 SAME conv: x [N,C,H,W], w [K,C,kh,kw] -> [N,K,H,W]."""
+    """stride-1 conv: x [N,C,H,W], w [K,C,kh,kw] -> [N,K,H',W'].
+
+    ``padding="SAME"`` zero-pads to the input spatial extent;
+    ``padding="VALID"`` runs the kernel on the raw input (H' = H - kh + 1),
+    which is the form every per-step contraction of the distributed
+    schedules takes after halo windowing."""
     n, c, h, wd = x.shape
     k, c2, kh, kw = w.shape
     assert c == c2
     bb, bk, bc = min(block_b, n), min(block_k, k), min(block_c, c)
     assert n % bb == 0 and k % bk == 0 and c % bc == 0, (n, k, c, bb, bk, bc)
-    ph, pw = (kh - 1) // 2, (kw - 1) // 2
-    xp = jnp.pad(x, ((0, 0), (0, 0), (ph, kh - 1 - ph), (pw, kw - 1 - pw)))
+    if padding == "SAME":
+        ph, pw = (kh - 1) // 2, (kw - 1) // 2
+        xp = jnp.pad(x, ((0, 0), (0, 0), (ph, kh - 1 - ph),
+                         (pw, kw - 1 - pw)))
+    elif padding == "VALID":
+        xp = x
+    else:
+        raise ValueError(f"padding must be SAME or VALID, got {padding!r}")
     hp, wp = xp.shape[2], xp.shape[3]
+    ho, wo = hp - kh + 1, wp - kw + 1
     n_c = c // bc
     return pl.pallas_call(
         functools.partial(_conv_kernel, n_c=n_c, kh=kh, kw=kw),
@@ -68,8 +81,8 @@ def conv2d_pallas(x: jax.Array, w: jax.Array, *, block_b: int = 8,
             pl.BlockSpec((bb, bc, hp, wp), lambda i, j, q: (i, q, 0, 0)),
             pl.BlockSpec((bk, bc, kh, kw), lambda i, j, q: (j, q, 0, 0)),
         ],
-        out_specs=pl.BlockSpec((bb, bk, h, wd), lambda i, j, q: (i, j, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((n, k, h, wd), x.dtype),
-        scratch_shapes=[pltpu.VMEM((bb, bk, h, wd), jnp.float32)],
+        out_specs=pl.BlockSpec((bb, bk, ho, wo), lambda i, j, q: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, k, ho, wo), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bb, bk, ho, wo), jnp.float32)],
         interpret=interpret,
     )(xp, w)

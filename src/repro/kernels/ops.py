@@ -1,14 +1,19 @@
-"""jit'd public wrappers around the Pallas kernels.
+"""jit'd public wrappers around the Pallas kernels, plus the local-contraction
+dispatchers the distributed hot path (`repro.dist`) routes through.
 
-Block shapes default to the paper-derived plan (`kernels.tiling`).  On CPU
-(this container) the kernels execute in interpret mode; on TPU they compile
-to Mosaic.  `use_pallas=False` falls back to the XLA ops — the dispatch the
-framework uses for dtypes/shapes the kernels don't cover.
+Block shapes default to the paper-derived plan (`kernels.tiling`), memoized
+per shape tuple (`matmul_plan` / `conv_plan`) — the Eq. 4 solve is pure
+Python and would otherwise re-run at every trace site.  On CPU (this
+container) the kernels execute in interpret mode; on TPU they compile to
+Mosaic.  Shapes the kernels don't cover (strides, non-tiling extents) fall
+back to the XLA ops; ``REPRO_DIST_PALLAS=0`` forces the XLA path
+everywhere.
 """
 
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
@@ -19,26 +24,16 @@ from repro.kernels import tiling
 from repro.kernels.conv2d import conv2d_pallas
 from repro.kernels.matmul import matmul_pallas
 
+_DIST_PALLAS_ENV = "REPRO_DIST_PALLAS"
+_DIMNUMS = ("NCHW", "OIHW", "NCHW")
+
 
 def _on_cpu() -> bool:
     return jax.default_backend() == "cpu"
 
 
-@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k"))
-def matmul(x: jax.Array, w: jax.Array, *, block_m: int = 0, block_n: int = 0,
-           block_k: int = 0) -> jax.Array:
-    """Paper-planned tiled matmul.  Shapes must divide by the chosen blocks
-    (the planner only returns divisors of MXU-aligned extents)."""
-    m, k = x.shape
-    _, n = w.shape
-    if not (block_m and block_n and block_k):
-        bm, bn, bk = tiling.matmul_blocks(m, n, k)
-        # fall back to exact divisors
-        block_m = bm if m % bm == 0 else math_gcd_block(m, bm)
-        block_n = bn if n % bn == 0 else math_gcd_block(n, bn)
-        block_k = bk if k % bk == 0 else math_gcd_block(k, bk)
-    return matmul_pallas(x, w, block_m=block_m, block_n=block_n,
-                         block_k=block_k, interpret=_on_cpu())
+def _pallas_enabled() -> bool:
+    return os.environ.get(_DIST_PALLAS_ENV, "1") != "0"
 
 
 def math_gcd_block(extent: int, want: int) -> int:
@@ -49,6 +44,49 @@ def math_gcd_block(extent: int, want: int) -> int:
     return d
 
 
+# --------------------------------------------------------------------------
+# Memoized tiling plans (the Eq. 4 solve is pure Python; one per shape)
+# --------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def matmul_plan(m: int, n: int, k: int):
+    """Paper-planned ``(block_m, block_n, block_k)`` for an ``[m,k]@[k,n]``
+    matmul, projected onto exact divisors of the extents."""
+    bm, bn, bk = tiling.matmul_blocks(m, n, k)
+    return (bm if m % bm == 0 else math_gcd_block(m, bm),
+            bn if n % bn == 0 else math_gcd_block(n, bn),
+            bk if k % bk == 0 else math_gcd_block(k, bk))
+
+
+@functools.lru_cache(maxsize=None)
+def conv_plan(n: int, c: int, k: int, h: int, w: int, kh: int, kw: int):
+    """Paper-planned ``(block_b, block_k, block_c)`` for an NCHW/OIHW conv,
+    projected onto exact divisors."""
+    prob = ConvProblem.from_conv_layer(batch=n, cin=c, cout=k, h=h, w=w,
+                                       kh=kh, kw=kw)
+    plan = tiling.plan_blocks(prob)
+    return (math_gcd_block(n, max(1, plan.block_bhw // (h * w))),
+            math_gcd_block(k, plan.block_k),
+            math_gcd_block(c, plan.block_c))
+
+
+# --------------------------------------------------------------------------
+# jit'd whole-op wrappers
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k"))
+def matmul(x: jax.Array, w: jax.Array, *, block_m: int = 0, block_n: int = 0,
+           block_k: int = 0) -> jax.Array:
+    """Paper-planned tiled matmul.  Shapes must divide by the chosen blocks
+    (the planner only returns divisors of MXU-aligned extents)."""
+    m, k = x.shape
+    _, n = w.shape
+    if not (block_m and block_n and block_k):
+        block_m, block_n, block_k = matmul_plan(m, n, k)
+    return matmul_pallas(x, w, block_m=block_m, block_n=block_n,
+                         block_k=block_k, interpret=_on_cpu())
+
+
 @functools.partial(jax.jit, static_argnames=("block_b", "block_k", "block_c",
                                               "use_pallas"))
 def conv2d_same(x: jax.Array, w: jax.Array, *, block_b: int = 0,
@@ -57,17 +95,73 @@ def conv2d_same(x: jax.Array, w: jax.Array, *, block_b: int = 0,
     """stride-1 SAME conv, NCHW/OIHW."""
     if not use_pallas:
         return lax.conv_general_dilated(
-            x, w, (1, 1), "SAME",
-            dimension_numbers=("NCHW", "OIHW", "NCHW"),
+            x, w, (1, 1), "SAME", dimension_numbers=_DIMNUMS,
             preferred_element_type=jnp.float32).astype(x.dtype)
     n, c, h, wd = x.shape
     k, _, kh, kw = w.shape
     if not (block_b and block_k and block_c):
-        prob = ConvProblem.from_conv_layer(batch=n, cin=c, cout=k, h=h, w=wd,
-                                           kh=kh, kw=kw)
-        plan = tiling.plan_blocks(prob)
-        block_b = math_gcd_block(n, max(1, plan.block_bhw // (h * wd)))
-        block_k = math_gcd_block(k, plan.block_k)
-        block_c = math_gcd_block(c, plan.block_c)
+        block_b, block_k, block_c = conv_plan(n, c, k, h, wd, kh, kw)
     return conv2d_pallas(x, w, block_b=block_b, block_k=block_k,
                          block_c=block_c, interpret=_on_cpu())
+
+
+# --------------------------------------------------------------------------
+# Local-contraction dispatchers: the repro.dist hot path calls these for
+# every per-step slab contraction, so the distributed schedules run on the
+# same two-level-tiled kernels the chip-level story is about.
+# --------------------------------------------------------------------------
+
+def pallas_applicable_matmul(m: int, n: int, k: int) -> bool:
+    """The Pallas matmul covers the shape when every extent tiles into
+    blocks of at least the VPU sublane width (8)."""
+    return m % 8 == 0 and n % 8 == 0 and k % 8 == 0
+
+
+def pallas_applicable_conv(x_shape, w_shape, stride, padding) -> bool:
+    """The Pallas direct conv covers stride-1 SAME/VALID with feature dims
+    that tile into >= 8-wide blocks and kernels no larger than the image."""
+    n, c, h, wd = x_shape
+    k, c2, kh, kw = w_shape
+    return (tuple(stride) == (1, 1) and padding in ("SAME", "VALID")
+            and c == c2 and k % 8 == 0 and c % 8 == 0
+            and kh <= h and kw <= wd)
+
+
+def local_matmul(x: jax.Array, w: jax.Array, *,
+                 prefer_pallas: bool = True) -> jax.Array:
+    """``[m,k] @ [k,n]`` for a distributed inner step: the Pallas kernel
+    with the memoized paper plan when the shape tiles, else the XLA dot
+    (f32 accumulation either way).  The Pallas kernels are primal-only
+    (no JVP rule), so callers that differentiate through the call
+    natively — e.g. the ``save_gathered`` VJP variant — pass
+    ``prefer_pallas=False``."""
+    m, k = x.shape
+    _, n = w.shape
+    if prefer_pallas and _pallas_enabled() \
+            and pallas_applicable_matmul(m, n, k):
+        bm, bn, bk = matmul_plan(m, n, k)
+        return matmul_pallas(x, w, block_m=bm, block_n=bn, block_k=bk,
+                             interpret=_on_cpu())
+    return jnp.dot(x, w, preferred_element_type=jnp.float32).astype(
+        jnp.result_type(x.dtype, w.dtype))
+
+
+def local_conv2d(x: jax.Array, w: jax.Array, *, stride=(1, 1),
+                 padding: str = "VALID",
+                 prefer_pallas: bool = True) -> jax.Array:
+    """NCHW/OIHW conv for a distributed inner step: the Pallas direct-conv
+    kernel when it covers the shape (stride 1, tiling feature dims), else
+    ``lax.conv_general_dilated``.  ``prefer_pallas=False`` forces the XLA
+    path (the Pallas kernels are primal-only — no JVP rule)."""
+    stride = tuple(stride)
+    if (prefer_pallas and _pallas_enabled()
+            and pallas_applicable_conv(x.shape, w.shape, stride, padding)):
+        n, c, h, wd = x.shape
+        k, _, kh, kw = w.shape
+        bb, bk, bc = conv_plan(n, c, k, h, wd, kh, kw)
+        return conv2d_pallas(x, w, block_b=bb, block_k=bk, block_c=bc,
+                             padding=padding, interpret=_on_cpu())
+    return lax.conv_general_dilated(
+        x, w, stride, padding, dimension_numbers=_DIMNUMS,
+        preferred_element_type=jnp.float32).astype(
+            jnp.result_type(x.dtype, w.dtype))

@@ -376,6 +376,17 @@ class HloModule:
         return t
 
 
+def live_bytes(compiled) -> int:
+    """Per-device live bytes of a compiled executable: arguments + temps +
+    outputs from XLA's buffer assignment (``memory_analysis()``) — the
+    measured counterpart of the ``repro.dist`` ``*_mem_elems`` analytic
+    peak-live accounting (one definition, shared by the demo, the bench
+    baselines, and the tests that validate them)."""
+    ma = compiled.memory_analysis()
+    return (ma.temp_size_in_bytes + ma.output_size_in_bytes
+            + ma.argument_size_in_bytes)
+
+
 def analyze_hlo(text: str) -> Dict:
     mod = HloModule(text)
     t = mod.analyze()

@@ -46,12 +46,16 @@ def init_cnn(key, *, channels: List[int], n_classes: int, in_channels: int = 3,
 
 def forward_cnn(params: Dict, x: jax.Array, *, pool_every: int = 2,
                 use_pallas: bool = False, dist_mesh=None,
-                dist_schedule: str = "allgather") -> jax.Array:
+                dist_schedule: str = "allgather",
+                dist_save_gathered: bool = False) -> jax.Array:
     """x: [N, C, H, W] -> logits [N, n_classes].
 
     ``dist_mesh``: a 5-axis conv mesh (``dist.make_conv_mesh``) — routes
     every conv (and, when the shapes divide its matmul view, the head)
-    through the ``repro.dist`` distributed ops.
+    through the ``repro.dist`` distributed ops.  ``dist_schedule`` picks
+    the op schedule (``allgather`` / ``ring`` / ``ring2``);
+    ``dist_save_gathered`` trades backward-pass memory for zero
+    gather-replay wire (see ``conv2d_distributed``).
     """
     if dist_mesh is not None:
         from repro.dist.conv2d import conv2d_distributed
@@ -61,7 +65,8 @@ def forward_cnn(params: Dict, x: jax.Array, *, pool_every: int = 2,
     for i, blk in enumerate(params["convs"]):
         if dist_mesh is not None:
             x = conv2d_distributed(x, blk["w"], dist_mesh,
-                                   schedule=dist_schedule)
+                                   schedule=dist_schedule,
+                                   save_gathered=dist_save_gathered)
         else:
             x = conv2d_same(x, blk["w"], use_pallas=use_pallas)
         x = jax.nn.relu(x + blk["b"][None, :, None, None])
@@ -76,7 +81,8 @@ def forward_cnn(params: Dict, x: jax.Array, *, pool_every: int = 2,
         if matmul_grid_divides(x.shape[0], head.shape[0], head.shape[1],
                                mm_grid):
             return matmul_distributed(x, head, mm_mesh,
-                                      schedule=dist_schedule)
+                                      schedule=dist_schedule,
+                                      save_gathered=dist_save_gathered)
     return x @ head
 
 
