@@ -1,7 +1,8 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test fast-test dist-test grad-test demo bench bench-full
+.PHONY: test fast-test dist-test grad-test static-test verify-dist lint \
+	demo bench bench-full
 
 test:  ## tier-1 verify (full suite, fail-fast)
 	$(PY) -m pytest -x -q
@@ -14,6 +15,20 @@ dist-test:  ## only the distributed-algorithms suite
 
 grad-test:  ## distributed-op VJP / gradient checks (incl. 8-device grids)
 	$(PY) -m pytest -q -m grad
+
+static-test:  ## static-analysis verifier unit suite (no real devices)
+	$(PY) -m pytest -q -m static
+
+verify-dist:  ## prove the comm/memory invariants of every schedule cell
+	$(PY) -m repro.analysis.lint --report text
+
+lint:  ## ruff if available, else the raw-collective AST lint only
+	@if $(PY) -m ruff --version >/dev/null 2>&1; then \
+		$(PY) -m ruff check src tests; \
+	else \
+		echo "ruff not installed; running the AST lint only"; \
+	fi
+	$(PY) -m repro.analysis.astlint
 
 demo:  ## end-to-end distributed conv demo on 8 virtual devices
 	$(PY) examples/distributed_conv_demo.py

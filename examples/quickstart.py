@@ -10,8 +10,8 @@
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 
-from repro.core import (ConvProblem, comm_volume, resnet50_layers, solve,
-                        solve_closed_form, synthesize, table1_cost)
+from repro.core import (ConvProblem, comm_volume, resnet50_layers,
+                        synthesize, table1_cost)
 from repro.core.sharding_synthesis import synthesize_layer
 from repro.kernels.tiling import plan_blocks
 
@@ -56,6 +56,7 @@ print("Same optimizer, VMEM level: Pallas BlockSpec tiles")
 print("=" * 76)
 for name, prob in resnet50_layers(batch=32).items():
     plan = plan_blocks(prob)
-    print(f"  {name:10s}: blocks (bhw={plan.block_bhw:6d}, k={plan.block_k:4d},"
+    print(f"  {name:10s}: blocks (bhw={plan.block_bhw:6d},"
+          f" k={plan.block_k:4d},"
           f" c={plan.block_c:3d})  VMEM {plan.vmem_elems/1e6:5.2f}M elems  "
           f"HBM traffic {plan.hbm_traffic:.3e}")

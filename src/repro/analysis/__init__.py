@@ -1,0 +1,48 @@
+"""Static verifier for the distributed schedules (``repro.dist``).
+
+Every property the paper's algorithms promise — per-schedule wire volume,
+slab-vs-gathered peak memory, total ring permutations — is checked here
+*statically*: each (op, grid, schedule) cell is traced and compiled on a
+fake host mesh (``XLA_FLAGS=--xla_force_host_platform_device_count``),
+then the post-SPMD HLO is parsed and linted without executing anything.
+
+Passes
+------
+* **collective extraction** (:mod:`repro.analysis.collect`) — every
+  ``collective-permute`` / ``all-gather`` / ``all-reduce`` /
+  ``reduce-scatter`` in the compiled module, including inside
+  ``fori_loop`` bodies with their trip counts, attributed to mesh axes
+  by replica-group / permutation-orbit structure.
+* **deadlock / ring lint** (:func:`repro.analysis.lints.lint_deadlock`)
+  — ppermute source-target pairs must have unique sources and targets,
+  every orbit must sit inside one mesh-axis group, cycles must cover
+  their whole ring, and axes the trace declared as *ring* axes must
+  compile to total single-cycle rotations.
+* **footprint lint** (:func:`repro.analysis.lints.lint_footprint`) —
+  ring schedules must compile to IR with *no* all-gather on a
+  contraction operand, and ``memory_analysis()`` peak-live must track
+  the analytic ``conv/matmul_mem_elems`` within tolerance.
+* **accounting drift guard** (:func:`repro.analysis.lints.lint_wire`) —
+  IR-derived wire bytes must equal ``conv/matmul_comm_elems`` and
+  ``*_train_comm_elems`` (ratio 1.00) for fwd and VJP.
+* **attribution cross-check**
+  (:func:`repro.analysis.lints.lint_attribution`) — the trace-time
+  :class:`repro.dist.collectives.CollectiveNote` table and the compiled
+  collectives must name the same (kind, axis-partition) set.
+* **source AST lint** (:mod:`repro.analysis.astlint`) — raw ``jax.lax``
+  collectives are forbidden outside ``dist/collectives.py`` so every
+  collective stays accounted.
+
+Entry points: ``python -m repro.analysis.lint`` (CLI; see
+``make verify-dist``) and :func:`repro.analysis.verify.run_matrix`.
+"""
+
+from repro.analysis.collect import (Collective, axis_groups,
+                                    extract_collectives)
+from repro.analysis.lints import (Finding, lint_attribution, lint_deadlock,
+                                  lint_footprint, lint_wire)
+
+__all__ = [
+    "Collective", "Finding", "axis_groups", "extract_collectives",
+    "lint_attribution", "lint_deadlock", "lint_footprint", "lint_wire",
+]

@@ -1,0 +1,147 @@
+"""Source-level AST lint: raw ``jax.lax`` collectives are forbidden
+outside ``repro/dist/collectives.py``.
+
+The accounted wrappers there (:func:`repro.dist.collectives.ppermute`
+etc.) are how every collective stays attributable to a mesh axis — a
+raw ``lax.psum`` elsewhere would be invisible to the static verifier's
+trace-vs-IR cross-check.  This lint parses every source file under
+``src/repro`` and flags call sites of the raw primitives, resolving the
+usual import spellings (``jax.lax.psum``, ``lax.psum`` via ``from jax
+import lax`` / ``import jax.lax as lax``, and ``from jax.lax import
+psum [as p]``).  A call site can opt out with a trailing
+``# raw-collective-ok`` comment (e.g. numerics tests embedded in
+docs-adjacent scripts).
+
+Run directly: ``python -m repro.analysis.astlint [root]``.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+import sys
+from typing import List, Tuple
+
+#: The communicating ``jax.lax`` primitives.  ``axis_index``/``psum(1,
+#: axis)`` are trace-time-free and not listed.
+RAW_COLLECTIVES = frozenset({
+    "ppermute", "pshuffle", "psum", "pmean", "pmax", "pmin",
+    "all_gather", "psum_scatter", "all_to_all",
+})
+
+#: Repo-relative suffixes allowed to call the raw primitives.
+ALLOWED_SUFFIXES = (os.path.join("dist", "collectives.py"),)
+
+PRAGMA = "raw-collective-ok"
+
+
+@dataclasses.dataclass(frozen=True)
+class AstFinding:
+    path: str
+    line: int
+    name: str     # the jax.lax primitive called
+
+    def __str__(self):
+        return (f"{self.path}:{self.line}: raw jax.lax.{self.name} — "
+                f"use repro.dist.collectives.{self.name} so the "
+                f"collective stays accounted")
+
+
+class _Visitor(ast.NodeVisitor):
+    def __init__(self, source_lines):
+        self.lax_aliases = set()        # names bound to the jax.lax module
+        self.jax_aliases = {"jax"}      # names bound to the jax module
+        self.direct = {}                # local name -> raw primitive name
+        self.calls: List[Tuple[int, str]] = []
+        self._lines = source_lines
+
+    def visit_Import(self, node):
+        for a in node.names:
+            if a.name == "jax":
+                self.jax_aliases.add(a.asname or "jax")
+            elif a.name == "jax.lax" and a.asname:
+                self.lax_aliases.add(a.asname)
+        self.generic_visit(node)
+
+    def visit_ImportFrom(self, node):
+        if node.module == "jax":
+            for a in node.names:
+                if a.name == "lax":
+                    self.lax_aliases.add(a.asname or "lax")
+        elif node.module == "jax.lax":
+            for a in node.names:
+                if a.name in RAW_COLLECTIVES:
+                    self.direct[a.asname or a.name] = a.name
+        self.generic_visit(node)
+
+    def _resolve(self, func) -> str:
+        """The raw-primitive name a call target resolves to, or ''."""
+        if isinstance(func, ast.Name):
+            return self.direct.get(func.id, "")
+        if not (isinstance(func, ast.Attribute)
+                and func.attr in RAW_COLLECTIVES):
+            return ""
+        v = func.value
+        if isinstance(v, ast.Name) and v.id in self.lax_aliases:
+            return func.attr
+        if (isinstance(v, ast.Attribute) and v.attr == "lax"
+                and isinstance(v.value, ast.Name)
+                and v.value.id in self.jax_aliases):
+            return func.attr
+        return ""
+
+    def visit_Call(self, node):
+        name = self._resolve(node.func)
+        if name:
+            line = self._lines[node.lineno - 1] \
+                if node.lineno - 1 < len(self._lines) else ""
+            if PRAGMA not in line:
+                self.calls.append((node.lineno, name))
+        self.generic_visit(node)
+
+
+def lint_file(path: str) -> List[AstFinding]:
+    with open(path, encoding="utf-8") as f:
+        src = f.read()
+    try:
+        tree = ast.parse(src, filename=path)
+    except SyntaxError as e:
+        return [AstFinding(path=path, line=e.lineno or 0,
+                           name=f"<syntax error: {e.msg}>")]
+    v = _Visitor(src.splitlines())
+    v.visit(tree)
+    return [AstFinding(path=path, line=ln, name=nm) for ln, nm in v.calls]
+
+
+def lint_tree(root: str) -> List[AstFinding]:
+    """Lint every ``.py`` under ``root`` except the allowed files."""
+    findings: List[AstFinding] = []
+    for dirpath, _, files in sorted(os.walk(root)):
+        for fn in sorted(files):
+            if not fn.endswith(".py"):
+                continue
+            path = os.path.join(dirpath, fn)
+            if any(path.endswith(suf) for suf in ALLOWED_SUFFIXES):
+                continue
+            findings.extend(lint_file(path))
+    return findings
+
+
+def default_root() -> str:
+    """``src/repro`` of the repo this module is installed from."""
+    return os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    root = argv[0] if argv else default_root()
+    findings = lint_tree(root)
+    for f in findings:
+        print(f)
+    print(f"astlint: {len(findings)} finding(s) under {root}")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,198 @@
+"""Collective extraction: compiled post-SPMD HLO -> attributed collectives.
+
+Builds on :class:`repro.launch.hlo_analysis.HloModule`: the loop-aware
+``walk()`` visits every reachable op with its enclosing while-loop trip
+multiplier, and the ``replica_groups`` / ``source_target_pairs`` parsers
+recover the device-id structure of each collective.  Attribution maps
+that structure back to mesh axes: a collective's replica groups (or a
+ppermute's permutation orbits) are matched against the device-id
+partition each axis subset induces on the row-major mesh.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional, Sequence, Tuple
+
+from repro.launch.hlo_analysis import (COLLECTIVES, HloModule,
+                                       replica_groups, shape_bytes,
+                                       source_target_pairs)
+
+MeshAxes = Tuple[Tuple[str, int], ...]  # ordered (name, extent) pairs
+
+
+def normalize_mesh_axes(mesh_axes) -> MeshAxes:
+    """Accept a ``Mesh.shape`` dict (insertion-ordered) or a sequence of
+    ``(name, extent)`` pairs; return the canonical tuple form."""
+    if isinstance(mesh_axes, dict):
+        return tuple(mesh_axes.items())
+    return tuple((str(n), int(s)) for n, s in mesh_axes)
+
+
+def axis_groups(mesh_axes, subset: Sequence[str]) -> frozenset:
+    """Device-id partition induced by an axis subset of the row-major
+    mesh: one group per assignment of the *other* axes' coordinates —
+    the replica groups a collective over ``subset`` runs on.  Returned
+    as a ``frozenset`` of ``frozenset`` so partitions compare by value
+    regardless of group or member order."""
+    axes = normalize_mesh_axes(mesh_axes)
+    names = [n for n, _ in axes]
+    sizes = [s for _, s in axes]
+    sub = set(subset)
+    unknown = sub - set(names)
+    if unknown:
+        raise ValueError(f"axes {sorted(unknown)} not in mesh {names}")
+    strides = [1] * len(sizes)
+    for i in range(len(sizes) - 2, -1, -1):
+        strides[i] = strides[i + 1] * sizes[i + 1]
+    keep = [i for i, n in enumerate(names) if n not in sub]
+    take = [i for i, n in enumerate(names) if n in sub]
+    groups = []
+    for outer in range(math.prod(sizes[i] for i in keep) or 1):
+        base, rem = 0, outer
+        for i in keep:
+            base += (rem // math.prod(sizes[j] for j in keep
+                                      if j > i) % sizes[i]) * strides[i]
+        members = []
+        for inner in range(math.prod(sizes[i] for i in take) or 1):
+            dev, rem = base, inner
+            for i in take:
+                dev += (rem // math.prod(sizes[j] for j in take
+                                         if j > i) % sizes[i]) * strides[i]
+            members.append(dev)
+        groups.append(frozenset(members))
+    return frozenset(groups)
+
+
+def effective_axes(mesh_axes, subset: Sequence[str]) -> Tuple[str, ...]:
+    """The axis subset with extent-1 axes dropped (they do not change
+    the induced partition), in mesh order — the canonical attribution."""
+    axes = normalize_mesh_axes(mesh_axes)
+    sub = set(subset)
+    return tuple(n for n, s in axes if n in sub and s > 1)
+
+
+def _nontrivial_subsets(mesh_axes):
+    """All non-empty subsets of the extent>1 axes, smallest group first
+    (mesh order within equal sizes), paired with their partitions."""
+    axes = [(n, s) for n, s in normalize_mesh_axes(mesh_axes) if s > 1]
+    names = [n for n, _ in axes]
+    out = []
+    for mask in range(1, 1 << len(names)):
+        sub = tuple(n for i, n in enumerate(names) if mask >> i & 1)
+        size = math.prod(s for n, s in axes if n in sub)
+        out.append((size, sub))
+    out.sort(key=lambda t: (t[0], t[1]))
+    return [sub for _, sub in out]
+
+
+def orbits(pairs: Sequence[Tuple[int, int]]) -> Tuple[frozenset, ...]:
+    """Weakly-connected components of a ppermute's source-target pairs —
+    the device sets that exchange data with each other."""
+    parent: Dict[int, int] = {}
+
+    def find(a):
+        while parent[a] != a:
+            parent[a] = parent[parent[a]]
+            a = parent[a]
+        return a
+
+    for s, t in pairs:
+        parent.setdefault(s, s)
+        parent.setdefault(t, t)
+        parent[find(s)] = find(t)
+    comps: Dict[int, set] = {}
+    for d in parent:
+        comps.setdefault(find(d), set()).add(d)
+    return tuple(frozenset(c) for c in comps.values())
+
+
+@dataclasses.dataclass(frozen=True)
+class Collective:
+    """One collective op of a compiled module, with loop context and
+    mesh-axis attribution."""
+
+    kind: str                       # all-reduce | all-gather | ...
+    name: str                       # HLO op name
+    comp: str                       # enclosing computation
+    mult: float                     # enclosing while-loop trip product
+    result_bytes: int               # bytes of the op's result shape
+    wire_bytes: float               # ring-model wire x mult (per device)
+    group_size: int
+    axes: Optional[Tuple[str, ...]]           # attributed axes, or None
+    groups: Optional[frozenset]     # replica groups / ppermute orbits
+    pairs: Optional[Tuple[Tuple[int, int], ...]]  # ppermute only
+
+    @property
+    def is_trivial(self) -> bool:
+        """Degenerate collective (group size 1, e.g. over an extent-1
+        axis): moves no bytes, exempt from attribution."""
+        return self.group_size <= 1
+
+
+def _attribute_groups(groups: frozenset, subsets, mesh_axes):
+    for sub in subsets:
+        if axis_groups(mesh_axes, sub) == groups:
+            return sub
+    return None
+
+
+def _attribute_orbits(obs: Tuple[frozenset, ...], subsets, mesh_axes):
+    """Smallest axis subset whose groups contain every orbit (a ppermute
+    never materializes full groups, so containment — not equality — is
+    the right relation)."""
+    for sub in subsets:
+        gs = axis_groups(mesh_axes, sub)
+        if all(any(o <= g for g in gs) for o in obs):
+            return sub
+    return None
+
+
+def extract_collectives(hlo_text: str, mesh_axes) -> Tuple[Collective, ...]:
+    """Every collective reachable from the entry computation of a
+    compiled module, with while-loop trip multipliers and mesh-axis
+    attribution.  ``mesh_axes`` is the compiling mesh's ``.shape`` dict
+    (or ``(name, extent)`` pairs) in mesh-definition order — device ids
+    are assumed row-major over it, as ``jax.sharding.Mesh`` lays them
+    out."""
+    mesh_axes = normalize_mesh_axes(mesh_axes)
+    subsets = _nontrivial_subsets(mesh_axes)
+    mod = HloModule(hlo_text)
+    out = []
+    for comp, op, mult in mod.walk():
+        oc = op.opcode
+        if not oc.startswith(COLLECTIVES) or oc.endswith("-done"):
+            continue
+        kind = next(c for c in COLLECTIVES if oc.startswith(c))
+        v = shape_bytes(op.rtype)
+        pairs = groups = axes = None
+        if kind == "collective-permute":
+            pairs = source_target_pairs(op.rest) or ()
+            groups = orbits(pairs)
+            g = max((len(o) for o in groups), default=1)
+            axes = (effective_axes(
+                mesh_axes, _attribute_orbits(groups, subsets, mesh_axes)
+                or ()) or None) if pairs else None
+            wire = float(v)
+        else:
+            groups = replica_groups(op.rest)
+            if groups is not None:
+                groups = frozenset(frozenset(g) for g in groups)
+                g = max((len(gr) for gr in groups), default=1)
+                sub = _attribute_groups(groups, subsets, mesh_axes)
+                axes = effective_axes(mesh_axes, sub) if sub else None
+            else:
+                g = 2
+            if kind == "all-reduce":
+                wire = 2.0 * v * (g - 1) / max(g, 1)
+            elif kind == "reduce-scatter":
+                wire = float(v) * (g - 1)   # rtype is the shard
+            else:                           # all-gather / all-to-all
+                wire = float(v) * (g - 1) / max(g, 1)
+        out.append(Collective(
+            kind=kind, name=op.name, comp=comp, mult=mult,
+            result_bytes=v, wire_bytes=wire * mult, group_size=g,
+            axes=axes, groups=groups,
+            pairs=tuple(pairs) if pairs is not None else None))
+    return tuple(out)

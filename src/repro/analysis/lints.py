@@ -1,0 +1,237 @@
+"""Lint passes over extracted collectives: deadlock/ring structure,
+gathered-footprint, accounting drift, and trace-vs-IR attribution.
+
+Each pass returns a list of :class:`Finding`; an empty list is a clean
+pass.  ``severity`` is ``"error"`` for violated invariants and
+``"warning"`` for suspicious-but-legal structure.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+from repro.analysis.collect import (Collective, axis_groups,
+                                    effective_axes, normalize_mesh_axes)
+from repro.dist.collectives import CollectiveNote
+
+#: Call-site tags of the ring primitives (``repro.dist.collectives``)
+#: whose ppermutes promise a *total* rotation of their ring: every rank
+#: sends and receives exactly once per hop.  Partial shifts (halo
+#: exchange, pipeline stage handoff) are legal ppermutes but must never
+#: appear under these tags.
+RING_TAGS = frozenset({"ring_reduce", "ring_zip", "ring_scatter_reduce",
+                       "ring_reduce_scatter"})
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    lint: str        # deadlock | footprint | wire | memory | attribution
+    severity: str    # error | warning
+    message: str
+
+    def __str__(self):
+        return f"[{self.severity}] {self.lint}: {self.message}"
+
+
+def errors(findings: Iterable[Finding]) -> List[Finding]:
+    return [f for f in findings if f.severity == "error"]
+
+
+# ------------------------------------------------------------- deadlock
+
+def _cycles(pairs: Sequence[Tuple[int, int]]):
+    """Simple cycles of the (unique-source, unique-target) pair graph:
+    each node has out-degree <= 1, so following successors from any node
+    either terminates (open chain) or closes a cycle."""
+    succ = dict(pairs)
+    seen = set()
+    cycles = []
+    for start in succ:
+        if start in seen:
+            continue
+        path, node = [], start
+        on_path = {}
+        while node in succ and node not in seen:
+            on_path[node] = len(path)
+            path.append(node)
+            seen.add(node)
+            node = succ[node]
+            if node in on_path:
+                cycles.append(frozenset(path[on_path[node]:]))
+                break
+    return cycles
+
+
+def lint_deadlock(collectives: Sequence[Collective], mesh_axes,
+                  notes: Optional[Sequence[CollectiveNote]] = None,
+                  ) -> List[Finding]:
+    """Ring/permutation structure of every compiled ppermute.
+
+    Unconditionally: sources unique, targets unique, every orbit inside
+    one mesh-axis group, and any cycle must cover its *entire* axis
+    group (a partial cycle starves the ranks outside it of a hop they
+    are waiting on — the SPMD hang this lint exists to catch).  When
+    trace-time ``notes`` declare ring ppermutes on an axis (tags in
+    :data:`RING_TAGS`), every compiled ppermute on that axis must
+    additionally be a total bijection: one cycle per group, covering
+    every group of the axis."""
+    mesh_axes = normalize_mesh_axes(mesh_axes)
+    out: List[Finding] = []
+    ring_axes = set()
+    for n in notes or ():
+        if n.kind == "collective-permute" and n.tag in RING_TAGS:
+            ring_axes.add(effective_axes(mesh_axes, n.axes))
+    ring_axes.discard(())
+    for c in collectives:
+        if c.kind != "collective-permute" or c.pairs is None:
+            continue
+        where = f"ppermute {c.name} ({c.comp})"
+        srcs = [s for s, _ in c.pairs]
+        tgts = [t for _, t in c.pairs]
+        if len(set(srcs)) != len(srcs) or len(set(tgts)) != len(tgts):
+            out.append(Finding("deadlock", "error",
+                               f"{where}: duplicate source or target in "
+                               f"pairs {c.pairs}"))
+            continue
+        if c.axes is None:
+            out.append(Finding("deadlock", "error",
+                               f"{where}: orbits {c.groups} fit no "
+                               f"mesh-axis group of {mesh_axes}"))
+            continue
+        groups = axis_groups(mesh_axes, c.axes)
+        for cyc in _cycles(c.pairs):
+            full = next((g for g in groups if cyc <= g), None)
+            if full is None or cyc != full:
+                out.append(Finding(
+                    "deadlock", "error",
+                    f"{where}: cycle over {sorted(cyc)} covers only part "
+                    f"of its {'x'.join(c.axes)} group"
+                    f"{sorted(full) if full else ''}"))
+        if c.axes in ring_axes:
+            # declared ring hop: total bijection on every group
+            if set(srcs) != set(tgts):
+                out.append(Finding(
+                    "deadlock", "error",
+                    f"{where}: ring hop on axis {'x'.join(c.axes)} is not "
+                    f"a bijection (sources != targets); a rank blocks "
+                    f"forever on a message no peer sends"))
+                continue
+            covered = {d for o in c.groups for d in o}
+            missing = [sorted(g) for g in groups if not g <= covered]
+            if missing:
+                out.append(Finding(
+                    "deadlock", "error",
+                    f"{where}: ring hop on axis {'x'.join(c.axes)} skips "
+                    f"groups {missing}"))
+    return out
+
+
+# ------------------------------------------------------------ footprint
+
+def lint_footprint(collectives: Sequence[Collective], *,
+                   schedule: str,
+                   contraction_axes: Sequence[str],
+                   live: Optional[float] = None,
+                   analytic: Optional[float] = None,
+                   mem_band: Optional[Tuple[float, float]] = None,
+                   ) -> List[Finding]:
+    """Slab-memory promise of the ring schedules.
+
+    ``"ring"``/``"ring2"`` pipeline the contraction operands around
+    ppermute rings, so the compiled IR must contain *no* all-gather on a
+    contraction axis (one is a gathered-operand materialization — the
+    exact footprint the schedule exists to avoid).  When ``live`` (the
+    compiled executable's ``memory_analysis()`` peak) and ``analytic``
+    (``conv/matmul_mem_elems`` in bytes) are given, their ratio must lie
+    inside ``mem_band``."""
+    out: List[Finding] = []
+    caxes = set(contraction_axes)
+    if schedule in ("ring", "ring2"):
+        for c in collectives:
+            if c.kind != "all-gather" or c.is_trivial:
+                continue
+            if c.axes and caxes & set(c.axes):
+                out.append(Finding(
+                    "footprint", "error",
+                    f"{schedule} cell compiled an all-gather ({c.name}) "
+                    f"on contraction axis {'x'.join(c.axes)}: gathered "
+                    f"operand materialized, slab-memory promise broken"))
+    if live is not None and analytic is not None and mem_band is not None:
+        ratio = live / analytic if analytic else float("inf")
+        lo, hi = mem_band
+        if not (lo <= ratio <= hi):
+            out.append(Finding(
+                "memory", "error",
+                f"peak live {live:.3g} B vs analytic {analytic:.3g} B: "
+                f"ratio {ratio:.3f} outside [{lo}, {hi}]"))
+    return out
+
+
+# ----------------------------------------------------------- wire drift
+
+def lint_wire(measured_bytes: float, analytic_bytes: float, *,
+              rtol: float = 0.02, what: str = "fwd") -> List[Finding]:
+    """Accounting drift guard: IR-derived wire bytes must equal the
+    analytic ``*_comm_elems`` model (ratio 1.00 within ``rtol``)."""
+    if analytic_bytes == 0:
+        if measured_bytes == 0:
+            return []
+        return [Finding("wire", "error",
+                        f"{what}: analytic model says zero wire but IR "
+                        f"moves {measured_bytes:.3g} B")]
+    ratio = measured_bytes / analytic_bytes
+    if abs(ratio - 1.0) > rtol:
+        return [Finding(
+            "wire", "error",
+            f"{what}: IR wire {measured_bytes:.4g} B vs analytic "
+            f"{analytic_bytes:.4g} B — ratio {ratio:.4f} drifts past "
+            f"+/-{rtol}")]
+    return []
+
+
+# ---------------------------------------------------------- attribution
+
+def _partition_key(mesh_axes, axes: Sequence[str]):
+    """Canonical key of an axis subset: its extent>1 axes in mesh order
+    (two subsets inducing the same device partition share a key)."""
+    return effective_axes(mesh_axes, axes)
+
+
+def lint_attribution(collectives: Sequence[Collective],
+                     notes: Sequence[CollectiveNote], mesh_axes, *,
+                     require_noted: bool = True) -> List[Finding]:
+    """Trace-vs-IR cross-check: every trace-time
+    :class:`~repro.dist.collectives.CollectiveNote` over a non-trivial
+    axis set must survive to the compiled IR as a collective of the same
+    kind on the same device partition, and (``require_noted``) every
+    non-trivial IR collective must be accounted for by a note.  Set
+    ``require_noted=False`` for natively differentiated cells, where
+    JAX's transpose synthesizes legitimate unnoted collectives."""
+    mesh_axes = normalize_mesh_axes(mesh_axes)
+    out: List[Finding] = []
+    noted: Dict[Tuple[str, Tuple[str, ...]], int] = {}
+    for n in notes:
+        key = (n.kind, _partition_key(mesh_axes, n.axes))
+        if key[1]:
+            noted[key] = noted.get(key, 0) + 1
+    compiled: Dict[Tuple[str, Tuple[str, ...]], int] = {}
+    for c in collectives:
+        if c.is_trivial:
+            continue
+        key = (c.kind, c.axes if c.axes else ("?",))
+        compiled[key] = compiled.get(key, 0) + 1
+    for kind, axes in noted:
+        if (kind, axes) not in compiled:
+            out.append(Finding(
+                "attribution", "error",
+                f"traced {kind} on axis {'x'.join(axes)} never reached "
+                f"the compiled IR (optimized away or mis-lowered)"))
+    if require_noted:
+        for kind, axes in compiled:
+            if (kind, axes) not in noted:
+                out.append(Finding(
+                    "attribution", "error",
+                    f"compiled {kind} on axis {'x'.join(axes)} has no "
+                    f"trace-time note: an unaccounted collective"))
+    return out

@@ -1,0 +1,321 @@
+"""Cell driver: trace, compile and lint every (op, grid, schedule) cell.
+
+Each cell compiles the distributed op on a fake host mesh (the caller —
+CLI, Makefile or test — sets ``XLA_FLAGS=--xla_force_host_platform_
+device_count`` *before* importing jax) and runs the full lint battery
+on the artifact: collective extraction + deadlock lint, wire-drift
+guard (fwd and VJP), peak-live memory band, ring-footprint lint, and
+the trace-vs-IR attribution cross-check.  Nothing is executed.
+
+Kernel dispatch should be pinned to the XLA ops
+(``REPRO_DIST_PALLAS=0``): interpret-mode Pallas emulation buffers
+would swamp the schedule's own footprint in ``memory_analysis()`` on
+CPU.  :func:`run_matrix` sets it defensively.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import List, Optional, Sequence, Tuple
+
+from repro.analysis import lints
+from repro.analysis.collect import Collective, extract_collectives
+
+CONV_CONTRACTION_AXES = ("b", "k")   # In gathers over k, Ker over b
+MATMUL_CONTRACTION_AXES = ("m", "n")
+
+#: Drift tolerance of the wire guard: IR wire / analytic wire must be
+#: 1.00 within this.
+WIRE_RTOL = 0.02
+#: memory_analysis() peak-live vs analytic ``*_mem_elems`` bands (the
+#: analytic model counts schedule buffers, XLA adds scratch and elides
+#: what it can — same bands the dynamic acceptance tests established).
+#: The gather schedule gets more headroom on the forward pass: XLA may
+#: keep the all-gather result *and* a layout copy of it, and the model
+#: deliberately counts the gathered buffer once.  The ring schedules
+#: must hold the tight band — slab memory is their whole promise.
+MEM_BAND_FWD = (0.4, 1.6)
+MEM_BAND_FWD_GATHER = (0.4, 2.1)
+MEM_BAND_TRAIN = (0.05, 1.3)
+
+#: Default verification matrix: the 8-device acceptance grids — 2.5D,
+#: pure-DP, degenerate-ring and spatial+contraction conv grids; the 3D,
+#: 1D-ring and pure-m matmul grids.  c-heavy shapes so the contraction
+#: operands dominate scratch in the memory band.
+DEFAULT_CONV_GRIDS = ((2, 1, 1, 2, 2), (8, 1, 1, 1, 1),
+                      (1, 1, 1, 2, 4), (1, 2, 2, 2, 1))
+DEFAULT_MATMUL_GRIDS = ((2, 2, 2), (1, 8, 1), (8, 1, 1))
+CONV_X, CONV_W = (8, 128, 8, 8), (32, 128, 3, 3)
+MATMUL_MCN = (256, 1024, 64)
+SCHEDULES = ("allgather", "ring", "ring2")
+
+
+@dataclasses.dataclass
+class CellReport:
+    """Lint outcome of one compiled cell."""
+
+    name: str                 # e.g. conv[2,1,1,2,2]/ring2/train
+    op: str                   # conv | matmul
+    grid: Tuple[int, ...]
+    schedule: str             # requested
+    effective: str            # after ring2 fallback
+    variant: str              # fwd | train | train-sg (+ stride/pad tags)
+    wire_ratio: Optional[float]
+    mem_ratio: Optional[float]
+    n_collectives: int
+    findings: List[lints.Finding]
+
+    @property
+    def ok(self) -> bool:
+        return not lints.errors(self.findings)
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["ok"] = self.ok
+        d["findings"] = [dataclasses.asdict(f) for f in self.findings]
+        return d
+
+
+def _compile(fn, *avals):
+    """Trace (recording the accounted-collective notes) and compile."""
+    import jax
+
+    from repro.dist.collectives import record_collectives
+    with record_collectives() as notes:
+        lowered = jax.jit(fn).lower(*avals)
+    return lowered.compile(), tuple(notes)
+
+
+def _lint_cell(compiled, notes, mesh_axes, *, schedule: str,
+               contraction_axes, analytic_wire: float,
+               analytic_mem: Optional[float],
+               mem_band: Optional[Tuple[float, float]],
+               wire_rtol: float, require_noted: bool, what: str,
+               ) -> Tuple[List[lints.Finding], Sequence[Collective],
+                          Optional[float], Optional[float]]:
+    from repro.launch.hlo_analysis import live_bytes
+    colls = extract_collectives(compiled.as_text(), mesh_axes)
+    findings: List[lints.Finding] = []
+    findings += lints.lint_deadlock(colls, mesh_axes, notes)
+    findings += lints.lint_attribution(colls, notes, mesh_axes,
+                                       require_noted=require_noted)
+    measured = sum(c.wire_bytes for c in colls)
+    findings += lints.lint_wire(measured, analytic_wire,
+                                rtol=wire_rtol, what=what)
+    live = float(live_bytes(compiled)) if analytic_mem is not None else None
+    findings += lints.lint_footprint(
+        colls, schedule=schedule, contraction_axes=contraction_axes,
+        live=live, analytic=analytic_mem, mem_band=mem_band)
+    wire_ratio = measured / analytic_wire if analytic_wire else None
+    mem_ratio = (live / analytic_mem
+                 if live is not None and analytic_mem else None)
+    return findings, colls, wire_ratio, mem_ratio
+
+
+def verify_conv_cell(grid, schedule: str, *, stride=(1, 1),
+                     padding="SAME", save_gathered: bool = False,
+                     x_shape=CONV_X, w_shape=CONV_W,
+                     include_fwd: bool = True, include_train: bool = True,
+                     check_mem: bool = True, wire_rtol: float = WIRE_RTOL,
+                     ) -> List[CellReport]:
+    """Compile + lint one conv cell (fwd and/or fwd+VJP)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.dist.conv2d import (_conv_effective_schedule,
+                                   conv2d_distributed, conv_comm_elems,
+                                   conv_mem_elems, conv_train_comm_elems,
+                                   conv_train_mem_elems, make_conv_mesh)
+    mesh = make_conv_mesh(grid)
+    mesh_axes = tuple(mesh.shape.items())
+    eff = _conv_effective_schedule(schedule, grid)
+    xs = jax.ShapeDtypeStruct(x_shape, jnp.float32)
+    ws = jax.ShapeDtypeStruct(w_shape, jnp.float32)
+    tag = "".join([f"/s{stride[0]}{stride[1]}" if stride != (1, 1) else "",
+                   f"/{padding.lower()}" if padding != "SAME" else ""])
+    name = f"conv[{','.join(map(str, grid))}]/{schedule}{tag}"
+    common = dict(mesh_axes=mesh_axes, schedule=eff,
+                  contraction_axes=CONV_CONTRACTION_AXES,
+                  wire_rtol=wire_rtol)
+    reports: List[CellReport] = []
+
+    def op(a, b):
+        return conv2d_distributed(a, b, mesh, schedule=schedule,
+                                  stride=stride, padding=padding,
+                                  save_gathered=save_gathered)
+
+    if include_fwd:
+        compiled, notes = _compile(op, xs, ws)
+        an_wire = conv_comm_elems(x_shape, w_shape, grid, stride=stride,
+                                  padding=padding)["total"] * 4
+        an_mem = (conv_mem_elems(x_shape, w_shape, grid, stride=stride,
+                                 padding=padding, schedule=schedule)
+                  ["peak"] * 4 if check_mem else None)
+        findings, colls, wr, mr = _lint_cell(
+            compiled, notes, analytic_wire=an_wire, analytic_mem=an_mem,
+            mem_band=(MEM_BAND_FWD_GATHER if eff == "allgather"
+                      else MEM_BAND_FWD),
+            require_noted=True, what="fwd", **common)
+        reports.append(CellReport(
+            name=f"{name}/fwd", op="conv", grid=tuple(grid),
+            schedule=schedule, effective=eff, variant=f"fwd{tag}",
+            wire_ratio=wr, mem_ratio=mr, n_collectives=len(colls),
+            findings=findings))
+    if include_train:
+        def train(a, b):
+            y, vjp = jax.vjp(op, a, b)
+            return vjp(y)
+
+        compiled, notes = _compile(train, xs, ws)
+        an_wire = conv_train_comm_elems(
+            x_shape, w_shape, grid, stride=stride, padding=padding,
+            schedule=schedule, save_gathered=save_gathered)["total"] * 4
+        an_mem = (conv_train_mem_elems(
+            x_shape, w_shape, grid, stride=stride, padding=padding,
+            schedule=schedule, save_gathered=save_gathered)["peak"] * 4
+            if check_mem else None)
+        variant = "train-sg" if save_gathered else "train"
+        findings, colls, wr, mr = _lint_cell(
+            compiled, notes, analytic_wire=an_wire, analytic_mem=an_mem,
+            mem_band=MEM_BAND_TRAIN,
+            require_noted=not save_gathered, what=variant, **common)
+        reports.append(CellReport(
+            name=f"{name}/{variant}", op="conv", grid=tuple(grid),
+            schedule=schedule, effective=eff, variant=f"{variant}{tag}",
+            wire_ratio=wr, mem_ratio=mr, n_collectives=len(colls),
+            findings=findings))
+    return reports
+
+
+def verify_matmul_cell(grid, schedule: str, *,
+                       save_gathered: bool = False, mcn=MATMUL_MCN,
+                       include_fwd: bool = True,
+                       include_train: bool = True, check_mem: bool = True,
+                       wire_rtol: float = WIRE_RTOL) -> List[CellReport]:
+    """Compile + lint one matmul cell (fwd and/or fwd+VJP)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.dist.matmul import (_matmul_effective_schedule,
+                                   make_matmul_mesh, matmul_comm_elems,
+                                   matmul_distributed, matmul_mem_elems,
+                                   matmul_train_comm_elems,
+                                   matmul_train_mem_elems)
+    M, C, N = mcn
+    mesh = make_matmul_mesh(grid)
+    mesh_axes = tuple(mesh.shape.items())
+    eff = _matmul_effective_schedule(schedule, tuple(grid))
+    a = jax.ShapeDtypeStruct((M, C), jnp.float32)
+    b = jax.ShapeDtypeStruct((C, N), jnp.float32)
+    name = f"matmul[{','.join(map(str, grid))}]/{schedule}"
+    common = dict(mesh_axes=mesh_axes, schedule=eff,
+                  contraction_axes=MATMUL_CONTRACTION_AXES,
+                  wire_rtol=wire_rtol)
+    reports: List[CellReport] = []
+
+    def op(p, q):
+        return matmul_distributed(p, q, mesh, schedule=schedule,
+                                  save_gathered=save_gathered)
+
+    if include_fwd:
+        compiled, notes = _compile(op, a, b)
+        an_wire = matmul_comm_elems(M, C, N, tuple(grid))["total"] * 4
+        an_mem = (matmul_mem_elems(M, C, N, tuple(grid),
+                                   schedule=schedule)["peak"] * 4
+                  if check_mem else None)
+        findings, colls, wr, mr = _lint_cell(
+            compiled, notes, analytic_wire=an_wire, analytic_mem=an_mem,
+            mem_band=(MEM_BAND_FWD_GATHER if eff == "allgather"
+                      else MEM_BAND_FWD),
+            require_noted=True, what="fwd", **common)
+        reports.append(CellReport(
+            name=f"{name}/fwd", op="matmul", grid=tuple(grid),
+            schedule=schedule, effective=eff, variant="fwd",
+            wire_ratio=wr, mem_ratio=mr, n_collectives=len(colls),
+            findings=findings))
+    if include_train:
+        def train(p, q):
+            y, vjp = jax.vjp(op, p, q)
+            return vjp(y)
+
+        compiled, notes = _compile(train, a, b)
+        an_wire = matmul_train_comm_elems(
+            M, C, N, tuple(grid), save_gathered=save_gathered)["total"] * 4
+        an_mem = (matmul_train_mem_elems(
+            M, C, N, tuple(grid), schedule=schedule,
+            save_gathered=save_gathered)["peak"] * 4 if check_mem
+            else None)
+        variant = "train-sg" if save_gathered else "train"
+        findings, colls, wr, mr = _lint_cell(
+            compiled, notes, analytic_wire=an_wire, analytic_mem=an_mem,
+            mem_band=MEM_BAND_TRAIN,
+            require_noted=not save_gathered, what=variant, **common)
+        reports.append(CellReport(
+            name=f"{name}/{variant}", op="matmul", grid=tuple(grid),
+            schedule=schedule, effective=eff, variant=variant,
+            wire_ratio=wr, mem_ratio=mr, n_collectives=len(colls),
+            findings=findings))
+    return reports
+
+
+def run_matrix(*, conv_grids=DEFAULT_CONV_GRIDS,
+               matmul_grids=DEFAULT_MATMUL_GRIDS,
+               schedules: Sequence[str] = SCHEDULES,
+               include_train: bool = True, include_variants: bool = True,
+               wire_rtol: float = WIRE_RTOL,
+               progress=None) -> List[CellReport]:
+    """The full verification matrix: grids x schedules x {fwd, VJP},
+    plus (``include_variants``) the stride/VALID-padding and
+    ``save_gathered`` variants on the flagship 2.5D grids."""
+    os.environ.setdefault("REPRO_DIST_PALLAS", "0")
+    reports: List[CellReport] = []
+
+    def emit(cells):
+        reports.extend(cells)
+        if progress is not None:
+            for c in cells:
+                progress(c)
+
+    for grid in conv_grids:
+        for sched in schedules:
+            emit(verify_conv_cell(grid, sched,
+                                  include_train=include_train,
+                                  wire_rtol=wire_rtol))
+    for grid in matmul_grids:
+        for sched in schedules:
+            emit(verify_matmul_cell(grid, sched,
+                                    include_train=include_train,
+                                    wire_rtol=wire_rtol))
+    if include_variants:
+        flagship = conv_grids[0] if conv_grids else None
+        for sched in schedules:
+            if flagship is not None:
+                emit(verify_conv_cell(flagship, sched, stride=(2, 2),
+                                      include_train=include_train,
+                                      wire_rtol=wire_rtol))
+                emit(verify_conv_cell(flagship, sched, stride=(2, 2),
+                                      padding="VALID",
+                                      include_train=include_train,
+                                      wire_rtol=wire_rtol))
+                if include_train:
+                    emit(verify_conv_cell(flagship, sched,
+                                          save_gathered=True,
+                                          include_fwd=False,
+                                          wire_rtol=wire_rtol))
+            if matmul_grids and include_train:
+                emit(verify_matmul_cell(matmul_grids[0], sched,
+                                        save_gathered=True,
+                                        include_fwd=False,
+                                        wire_rtol=wire_rtol))
+    return reports
+
+
+def summarize(reports: Sequence[CellReport]) -> dict:
+    """JSON-ready summary: per-cell results plus total error count."""
+    n_err = sum(len(lints.errors(r.findings)) for r in reports)
+    return {"cells": [r.to_dict() for r in reports],
+            "n_cells": len(reports),
+            "n_failed_cells": sum(not r.ok for r in reports),
+            "n_errors": n_err,
+            "ok": n_err == 0}

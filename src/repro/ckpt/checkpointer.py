@@ -18,16 +18,15 @@ the format is the multi-host one.
 
 from __future__ import annotations
 
-import json
 import os
 import shutil
 import threading
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, List, Optional, Tuple
 
 import jax
+import ml_dtypes
 import msgpack
 import numpy as np
-import ml_dtypes
 
 _SENTINEL = "_COMMITTED"
 

@@ -19,5 +19,5 @@ def config() -> ModelConfig:
 
 def smoke_config() -> ModelConfig:
     return dataclasses.replace(
-        _BASE, head_dim=None, n_layers=2, n_enc_layers=2, d_model=48, n_heads=2,
-        n_kv_heads=2, d_ff=96, vocab=256, remat=False)
+        _BASE, head_dim=None, n_layers=2, n_enc_layers=2, d_model=48,
+        n_heads=2, n_kv_heads=2, d_ff=96, vocab=256, remat=False)

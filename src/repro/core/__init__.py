@@ -4,7 +4,6 @@ Li, Xu, Sukumaran-Rajam, Rountev, Sadayappan — "Efficient Distributed
 Algorithms for Convolutional Neural Networks", SPAA '21.
 """
 
-from repro.core.problem import ConvProblem, resnet50_layers
 from repro.core.cost_model import (
     TileChoice,
     cost_distributed_bwd,
@@ -22,6 +21,22 @@ from repro.core.cost_model import (
     simulate_tiled_movement,
     tile_footprint,
 )
+from repro.core.grid import (
+    CommVolume,
+    ProcessorGrid,
+    comm_volume,
+    compare_algorithms,
+    grid_from_tuple,
+    synthesize,
+)
+from repro.core.problem import ConvProblem, resnet50_layers
+from repro.core.sharding_synthesis import (
+    DistGridChoice,
+    LayerSharding,
+    synthesize_dist_grid,
+    synthesize_layer,
+    synthesize_model,
+)
 from repro.core.tile_optimizer import (
     ALGO_25D,
     ALGO_2D,
@@ -32,21 +47,6 @@ from repro.core.tile_optimizer import (
     solve_closed_form,
     table1_cost,
     table2_cost,
-)
-from repro.core.grid import (
-    CommVolume,
-    ProcessorGrid,
-    comm_volume,
-    compare_algorithms,
-    grid_from_tuple,
-    synthesize,
-)
-from repro.core.sharding_synthesis import (
-    DistGridChoice,
-    LayerSharding,
-    synthesize_dist_grid,
-    synthesize_layer,
-    synthesize_model,
 )
 
 __all__ = [

@@ -214,7 +214,7 @@ def memory_distributed(p: ConvProblem, P: int, c: TileChoice) -> float:
     # Tile working buffers (In tile with halo + Ker tile).  Composite form.
     in_tile = p.sh * p.sw * c.Tbhw * c.Tc
     ker_tile = p.Nr * p.Ns * c.Tk * c.Tc
-    resident = (c.Wbhw * c.Wk            # Out slice (replicated over c if Pc>1)
+    resident = (c.Wbhw * c.Wk        # Out slice (replicated over c)
                 + p.size_ker() / P       # Ker initial shard
                 + p.size_in() / P)       # In initial shard
     return in_tile + ker_tile + resident

@@ -10,8 +10,7 @@ algorithm family (2D SUMMA / 2.5D / 3D analogue).
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 from repro.core import cost_model, tile_optimizer
 from repro.core.problem import ConvProblem

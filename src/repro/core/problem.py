@@ -59,15 +59,18 @@ class ConvProblem:
 
     def flops(self) -> int:
         """MACs * 2 for the forward operator."""
-        return 2 * self.Nb * self.Nk * self.Nc * self.Nh * self.Nw * self.Nr * self.Ns
+        return (2 * self.Nb * self.Nk * self.Nc * self.Nh * self.Nw
+                * self.Nr * self.Ns)
 
     def arithmetic_intensity(self) -> float:
-        moved = (self.size_in() + self.size_ker() + self.size_out()) * self.bytes_per_elem
+        moved = (self.size_in() + self.size_ker()
+                 + self.size_out()) * self.bytes_per_elem
         return self.flops() / moved
 
     # ------------------------------------------------------------ factories
     @classmethod
-    def from_matmul(cls, m: int, n: int, k: int, *, bytes_per_elem: int = 2) -> "ConvProblem":
+    def from_matmul(cls, m: int, n: int, k: int, *,
+                    bytes_per_elem: int = 2) -> "ConvProblem":
         """Out[m, n] = In[m, k] @ Ker[n, k]  ==  CNN with 1x1 kernel/image.
 
         ``m`` plays the role of the composite bhw index (batch*seq for a
@@ -77,7 +80,8 @@ class ConvProblem:
                    bytes_per_elem=bytes_per_elem)
 
     @classmethod
-    def from_conv_layer(cls, *, batch: int, cin: int, cout: int, h: int, w: int,
+    def from_conv_layer(cls, *, batch: int, cin: int, cout: int,
+                        h: int, w: int,
                         kh: int, kw: int, stride: int = 1,
                         bytes_per_elem: int = 2) -> "ConvProblem":
         """Standard deep-learning conv layer (output spatial size h x w)."""

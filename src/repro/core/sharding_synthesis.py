@@ -54,7 +54,8 @@ class LayerSharding:
 
     def axes_for(self, logical: str) -> Tuple[str, ...]:
         """Physical mesh axes assigned to a logical dim (stable order)."""
-        return tuple(ax for ax, dim in self.assignment.items() if dim == logical)
+        return tuple(ax for ax, dim in self.assignment.items()
+                     if dim == logical)
 
     # ---- PartitionSpecs for the matmul view  x:[m,k] w:[k,n] y:[m,n] ------
     def spec_activation(self) -> P:

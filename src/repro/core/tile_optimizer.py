@@ -18,7 +18,6 @@ projects it onto feasible integers and re-evaluates the exact Eq. 3 cost.
 from __future__ import annotations
 
 import dataclasses
-import itertools
 import math
 from typing import Iterable, List, Optional, Tuple
 
@@ -117,7 +116,8 @@ def solve_closed_form(p: ConvProblem, P: int, M: float,
         Tbhw, Tk = min(Tbhw, Wbhw), min(Tk, Wk)
         choice = TileChoice(Wbhw=Wbhw, Wk=Wk, Wc=float(p.Nc), Tbhw=Tbhw, Tk=Tk)
         cost = cost_model.cost_simplified(p, P, Wbhw, Wk, Tbhw, Tk)
-        candidates.append(Solution(CASE_2D_LIMITED, ALGO_2D, choice, cost, M_L, P))
+        candidates.append(
+            Solution(CASE_2D_LIMITED, ALGO_2D, choice, cost, M_L, P))
     else:
         # 1b: whole work partition fits in memory.
         Wk = math.sqrt(nkb_over_p * sig / rho)
@@ -128,18 +128,21 @@ def solve_closed_form(p: ConvProblem, P: int, M: float,
             Wbhw, Wk = float(p.Nbhw), nkb_over_p / p.Nbhw
         choice = TileChoice(Wbhw=Wbhw, Wk=Wk, Wc=float(p.Nc), Tbhw=Wbhw, Tk=Wk)
         cost = cost_model.cost_simplified(p, P, Wbhw, Wk, Wbhw, Wk)
-        candidates.append(Solution(CASE_2D_AMPLE, ALGO_2D, choice, cost, M_L, P))
+        candidates.append(
+            Solution(CASE_2D_AMPLE, ALGO_2D, choice, cost, M_L, P))
 
         # ---- Case 2 (W_c < N_c): only reachable when memory is ample -----
         if M_L >= three_d_threshold:
             # 2a: 3D analogue, communication-optimal point.
             Tk = (reuse / rho) ** (1.0 / 3.0) * sig ** (2.0 / 3.0)
             Tbhw = (reuse / sig) ** (1.0 / 3.0) * rho ** (2.0 / 3.0)
-            Wc = reuse / (Tk * Tbhw)  # = P*W... derived from PWbhwWkWc = NbhwNkNc
+            # Wc = P*W... derived from P*Wbhw*Wk*Wc = Nbhw*Nk*Nc
+            Wc = reuse / (Tk * Tbhw)
             if 1.0 <= Wc <= p.Nc and Tk <= p.Nk and Tbhw <= p.Nbhw:
                 choice = TileChoice(Wbhw=Tbhw, Wk=Tk, Wc=Wc, Tbhw=Tbhw, Tk=Tk)
                 cost = 3.0 * reuse ** (2.0 / 3.0) * (rho * sig) ** (1.0 / 3.0)
-                candidates.append(Solution(CASE_3D, ALGO_3D, choice, cost, M_L, P))
+                candidates.append(
+                    Solution(CASE_3D, ALGO_3D, choice, cost, M_L, P))
         else:
             # 2b: 2.5D analogue, memory-saturating tiles.
             Tk = math.sqrt(M_L * sig / rho)
@@ -147,8 +150,10 @@ def solve_closed_form(p: ConvProblem, P: int, M: float,
             Wc = reuse / M_L
             if 1.0 <= Wc <= p.Nc and Tk <= p.Nk and Tbhw <= p.Nbhw:
                 choice = TileChoice(Wbhw=Tbhw, Wk=Tk, Wc=Wc, Tbhw=Tbhw, Tk=Tk)
-                cost = M_L + 2.0 * reuse / math.sqrt(M_L) * math.sqrt(rho * sig)
-                candidates.append(Solution(CASE_25D, ALGO_25D, choice, cost, M_L, P))
+                cost = M_L + (2.0 * reuse / math.sqrt(M_L)
+                              * math.sqrt(rho * sig))
+                candidates.append(
+                    Solution(CASE_25D, ALGO_25D, choice, cost, M_L, P))
 
     best = min(candidates, key=lambda s: s.cost)
     return best
@@ -178,7 +183,8 @@ def table2_cost(p: ConvProblem, P: int, M_L: float) -> Tuple[str, float]:
                  and rho * p.Nk * p.Nc / P >= M_L
                  and sig * p.Nc * p.Nbhw / P >= M_L)
     if all_large:
-        return CASE_2D_LIMITED, resident + 2.0 * reuse * math.sqrt(rho * sig / M_L)
+        return (CASE_2D_LIMITED,
+                resident + 2.0 * reuse * math.sqrt(rho * sig / M_L))
     if M_L >= thresh:
         return CASE_3D, 3.0 * thresh
     return CASE_25D, M_L + 2.0 * reuse / math.sqrt(M_L) * math.sqrt(rho * sig)

@@ -49,6 +49,27 @@ Per-step local contractions dispatch through ``repro.kernels.ops``
 (Pallas tiled kernels with memoized paper plans where the shapes tile,
 XLA otherwise; ``REPRO_DIST_PALLAS=0`` forces XLA).
 
+**Verified invariants.**  ``repro.analysis`` (CLI:
+``python -m repro.analysis.lint`` / ``make verify-dist``) statically
+proves the claims above against the *compiled* post-SPMD HLO of every
+op, on a fake CPU mesh with no real devices:
+
+* **wire accounting** — IR wire bytes (ring model: all-gather
+  ``V*(g-1)/g``, reduce-scatter ``shard*(g-1)``, all-reduce
+  ``2V*(g-1)/g``, ppermute ``V``; loop-body collectives multiplied by
+  their trip counts) equal ``*_comm_elems`` / ``*_train_comm_elems``
+  within 2%, forward and VJP;
+* **footprint** — ``ring``/``ring2`` compile with no all-gather on a
+  contraction-ring operand, and XLA's ``memory_analysis()`` peak-live
+  stays within a band of ``*_mem_elems`` / ``*_train_mem_elems``;
+* **deadlock freedom** — every compiled ppermute's source-target pairs
+  are attributable to one mesh-axis ring, cycles cover their whole
+  device group, and ring-tagged permutes form total bijections;
+* **attribution** — every collective in the IR is declared by a
+  trace-time ``collectives.record_collectives()`` note and vice versa
+  (the accounted wrappers in ``dist.collectives`` are the only legal
+  spelling of raw collectives — enforced by an AST lint).
+
 Importing this package also installs a version-tolerant ``jax.shard_map``
 alias on JAX builds that only export the experimental spelling.
 """
@@ -56,8 +77,10 @@ alias on JAX builds that only export the experimental spelling.
 from repro.dist._compat import install_jax_alias, shard_map
 from repro.dist.collectives import (
     SCHEDULES,
+    CollectiveNote,
     gather_axis,
     make_mesh,
+    record_collectives,
     ring_all_gather,
     ring_reduce,
     ring_reduce_scatter,
@@ -108,7 +131,8 @@ def __getattr__(name):
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 __all__ = [
-    "SCHEDULES", "shard_map", "gather_axis", "ring_all_gather",
+    "SCHEDULES", "shard_map", "CollectiveNote", "record_collectives",
+    "gather_axis", "ring_all_gather",
     "ring_reduce", "ring_reduce_scatter", "ring_scatter_reduce",
     "ring_zip", "scatter_axis", "make_mesh",
     "conv2d_distributed", "make_conv_mesh", "conv_comm_elems",

@@ -22,7 +22,9 @@ position-stable.  Everything here must be called inside ``shard_map``.
 
 from __future__ import annotations
 
+import contextlib
 import math
+from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -31,6 +33,94 @@ from jax import lax
 from jax.sharding import Mesh
 
 SCHEDULES = ("allgather", "ring", "ring2")
+
+
+# --------------------------------------------------------------------------
+# Accounted collective wrappers
+#
+# This module is the only place in the repo allowed to call the raw
+# ``jax.lax`` collectives (``repro.analysis.astlint`` enforces it): every
+# other dist module goes through the wrappers below, so each collective a
+# schedule emits is attributable to a mesh axis.  Tracing a function under
+# :func:`record_collectives` yields one :class:`CollectiveNote` per wrapper
+# call — the trace-time attribution table the static verifier
+# (``repro.analysis``) cross-checks against the collectives it extracts
+# from the compiled HLO.
+# --------------------------------------------------------------------------
+
+class CollectiveNote(NamedTuple):
+    """One trace-time collective: HLO-level kind, the mesh axes it runs
+    over, and the call-site tag (which primitive emitted it)."""
+
+    kind: str             # all-reduce | all-gather | reduce-scatter |
+                          # collective-permute
+    axes: Tuple[str, ...]
+    tag: str
+
+
+_RECORD_STACK: list = []
+
+
+@contextlib.contextmanager
+def record_collectives():
+    """Collect a :class:`CollectiveNote` for every accounted collective
+    wrapper called while tracing under this context; yields the list."""
+    buf: list = []
+    _RECORD_STACK.append(buf)
+    try:
+        yield buf
+    finally:
+        _RECORD_STACK.pop()
+
+
+def _note(kind: str, axis_name, tag: str):
+    if _RECORD_STACK:
+        axes = (tuple(axis_name) if isinstance(axis_name, (tuple, list))
+                else (axis_name,))
+        _RECORD_STACK[-1].append(CollectiveNote(kind, axes, tag))
+
+
+def axis_size(axis_name) -> int:
+    """Static size of a bound mesh axis (``psum`` of 1 folds to a
+    constant at trace time — no collective is emitted)."""
+    return lax.psum(1, axis_name)
+
+
+def ppermute(x, axis_name: str, perm, *, tag: str = ""):
+    """Accounted ``lax.ppermute``.  ``perm`` must be a total bijection on
+    the axis ring — a partial permutation compiles but deadlocks SPMD
+    peers at runtime; the verifier's deadlock lint proves totality on the
+    compiled IR."""
+    _note("collective-permute", axis_name, tag)
+    return lax.ppermute(x, axis_name, perm)
+
+
+def psum(x, axis_name, *, tag: str = ""):
+    """Accounted ``lax.psum`` over one axis or an axis tuple."""
+    _note("all-reduce", axis_name, tag)
+    return lax.psum(x, axis_name)
+
+
+def pmean(x, axis_name, *, tag: str = ""):
+    """Accounted ``lax.pmean`` (lowers to an all-reduce)."""
+    _note("all-reduce", axis_name, tag)
+    return lax.pmean(x, axis_name)
+
+
+def all_gather(x, axis_name: str, *, axis: int = 0, tiled: bool = False,
+               tag: str = ""):
+    """Accounted ``lax.all_gather``."""
+    _note("all-gather", axis_name, tag)
+    return lax.all_gather(x, axis_name, axis=axis, tiled=tiled)
+
+
+def psum_scatter(x, axis_name: str, *, scatter_dimension: int = 0,
+                 tiled: bool = False, tag: str = ""):
+    """Accounted ``lax.psum_scatter`` (lowers to a reduce-scatter)."""
+    _note("reduce-scatter", axis_name, tag)
+    return lax.psum_scatter(x, axis_name,
+                            scatter_dimension=scatter_dimension,
+                            tiled=tiled)
 
 
 def make_mesh(grid, axes) -> Mesh:
@@ -59,20 +149,20 @@ def ring_reduce(x, axis_name: str, body, init):
     latency-hiding scheduler hoists every hop ahead of the compute,
     keeping all ``g`` shards live at once — the gathered footprint the
     pipelined schedules exist to avoid."""
-    g = lax.psum(1, axis_name)
+    g = axis_size(axis_name)
     me = lax.axis_index(axis_name)
     perm = [(i, (i + 1) % g) for i in range(g)]
     acc = body(init, me % g, x)
     if g <= 2:
         cur = x
         for step in range(1, g):
-            cur = lax.ppermute(cur, axis_name, perm)
+            cur = ppermute(cur, axis_name, perm, tag="ring_reduce")
             acc = body(acc, (me - step) % g, cur)
         return acc
 
     def step(t, carry):
         cur, a = carry
-        cur = lax.ppermute(cur, axis_name, perm)
+        cur = ppermute(cur, axis_name, perm, tag="ring_reduce")
         return cur, body(a, (me - t - 1) % g, cur)
 
     _, acc = lax.fori_loop(0, g - 1, step, (x, acc))
@@ -102,7 +192,7 @@ def ring_zip(a, axis_a: str, b, axis_b: str, body, init=None):
     with ``1 < ga < gb`` the shorter ring stops rotating mid-zip and the
     reported ``src`` index would no longer describe the resident piece.
     """
-    ga, gb = lax.psum(1, axis_a), lax.psum(1, axis_b)
+    ga, gb = axis_size(axis_a), axis_size(axis_b)
     if not (ga == gb or ga == 1 or gb == 1):
         raise ValueError(f"ring_zip needs equal or trivial ring sizes, "
                          f"got {ga} x {gb}")
@@ -115,9 +205,9 @@ def ring_zip(a, axis_a: str, b, axis_b: str, body, init=None):
         acc = body(acc, t, (ia - t) % ga, cur_a, (ib - t) % gb, cur_b)
         if t < steps - 1:
             if t < ga - 1:
-                cur_a = lax.ppermute(cur_a, axis_a, perm_a)
+                cur_a = ppermute(cur_a, axis_a, perm_a, tag="ring_zip")
             if t < gb - 1:
-                cur_b = lax.ppermute(cur_b, axis_b, perm_b)
+                cur_b = ppermute(cur_b, axis_b, perm_b, tag="ring_zip")
     return acc
 
 
@@ -139,18 +229,18 @@ def ring_scatter_reduce(axis_name: str, produce):
     ahead of the hops, materializing the gathered-size footprint this
     primitive exists to avoid.
     """
-    g = lax.psum(1, axis_name)
+    g = axis_size(axis_name)
     me = lax.axis_index(axis_name)
     cur = produce((me - 1) % g, 0)
     if g == 1:
         return cur
     perm = [(i, (i + 1) % g) for i in range(g)]
     if g == 2:
-        cur = lax.ppermute(cur, axis_name, perm)
+        cur = ppermute(cur, axis_name, perm, tag="ring_scatter_reduce")
         return cur + produce(me % g, 1)
 
     def step(t, tok):
-        tok = lax.ppermute(tok, axis_name, perm)
+        tok = ppermute(tok, axis_name, perm, tag="ring_scatter_reduce")
         return tok + produce((me - 2 - t) % g, t + 1)
 
     return lax.fori_loop(0, g - 1, step, cur)
@@ -165,7 +255,7 @@ def stream_elems(g: int, unit: float) -> float:
 
 def ring_all_gather(x, axis_name: str, *, dim: int):
     """All-gather ``x`` over ``axis_name`` via a ``ppermute`` ring."""
-    g = lax.psum(1, axis_name)
+    g = axis_size(axis_name)
     if g == 1:
         return x
     chunk = x.shape[dim]
@@ -187,7 +277,8 @@ def gather_axis(x, axis_name: str, *, dim: int, schedule: str):
                          f"got {schedule!r}")
     if schedule in ("ring", "ring2"):
         return ring_all_gather(x, axis_name, dim=dim)
-    return lax.all_gather(x, axis_name, axis=dim, tiled=True)
+    return all_gather(x, axis_name, axis=dim, tiled=True,
+                      tag="gather_axis")
 
 
 def ring_reduce_scatter(x, axis_name: str, *, dim: int):
@@ -200,7 +291,7 @@ def ring_reduce_scatter(x, axis_name: str, *, dim: int):
     way; wire volume is ``chunk * (g - 1)`` per device, the same as the
     gather it transposes.
     """
-    g = lax.psum(1, axis_name)
+    g = axis_size(axis_name)
     if g == 1:
         return x
     if x.shape[dim] % g:
@@ -215,7 +306,7 @@ def ring_reduce_scatter(x, axis_name: str, *, dim: int):
 
     cur = take((me - 1) % g)
     for t in range(1, g):
-        cur = lax.ppermute(cur, axis_name, perm)
+        cur = ppermute(cur, axis_name, perm, tag="ring_reduce_scatter")
         cur = cur + take((me - 1 - t) % g)
     return cur
 
@@ -228,4 +319,5 @@ def scatter_axis(x, axis_name: str, *, dim: int, schedule: str):
                          f"got {schedule!r}")
     if schedule in ("ring", "ring2"):
         return ring_reduce_scatter(x, axis_name, dim=dim)
-    return lax.psum_scatter(x, axis_name, scatter_dimension=dim, tiled=True)
+    return psum_scatter(x, axis_name, scatter_dimension=dim, tiled=True,
+                        tag="scatter_axis")

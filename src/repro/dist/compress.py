@@ -45,6 +45,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.dist.collectives import all_gather, axis_size, pmean
+
 
 WIRE_FORMATS = ("s8", "f32")
 
@@ -92,22 +94,22 @@ def compressed_psum(g, axis_name: str, err=None, *,
         comp = comp * _topk_mask(comp, k_frac)
     if not quantize:
         new_err = acc - comp
-        return lax.pmean(comp, axis_name), new_err
+        return pmean(comp, axis_name, tag="compress"), new_err
     q, scale = _quantize_parts(comp)
     # dequantize in f32, then back to the input dtype so the error-feedback
     # state keeps its dtype across steps (bf16 grads -> bf16 residual)
     dq = (q.astype(jnp.float32) * scale).astype(acc.dtype)
     new_err = acc - dq
     # gather-based s8 only wins below the 8/g break-even (module docstring)
-    if wire == "s8" and lax.psum(1, axis_name) < 8:
+    if wire == "s8" and axis_size(axis_name) < 8:
         # the actual s8 collective: payload + per-device scales gathered,
         # dequantized mean taken locally (== pmean of the dequantized)
-        qg = lax.all_gather(q, axis_name)                     # s8 wire
-        sg = lax.all_gather(scale, axis_name)                 # [g] f32
+        qg = all_gather(q, axis_name, tag="compress_s8")      # s8 wire
+        sg = all_gather(scale, axis_name, tag="compress_s8")  # [g] f32
         sg = sg.reshape((-1,) + (1,) * q.ndim)
         out = jnp.mean(qg.astype(jnp.float32) * sg, axis=0).astype(acc.dtype)
     else:
-        out = lax.pmean(dq, axis_name)
+        out = pmean(dq, axis_name, tag="compress")
     return out, new_err
 
 

@@ -85,9 +85,9 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.dist._compat import shard_map
 from repro.dist.collectives import (SCHEDULES, gather_axis, make_mesh,
-                                    ring_reduce, ring_scatter_reduce,
-                                    ring_zip, scatter_axis,
-                                    stream_elems)
+                                    ppermute, psum, ring_reduce,
+                                    ring_scatter_reduce, ring_zip,
+                                    scatter_axis, stream_elems)
 from repro.dist.halo import halo_accumulate_1d, halo_exchange_1d
 from repro.kernels import ops as kops
 
@@ -251,7 +251,7 @@ def _local_conv(xl, wl, *, sizes, stride, plans, schedule, pallas=True):
     if schedule == "ring2":
         out = _conv_fwd_ring2(xl, wl, pb=pb, pk=pk, conv=conv)
         if pc > 1:
-            out = lax.psum(out, "c")
+            out = psum(out, "c", tag="conv_out")
         return out
     # kernel contraction sub-shard gathered over the batch axis
     wg = gather_axis(wl, "b", dim=1, schedule=schedule) if pb > 1 else wl
@@ -272,7 +272,7 @@ def _local_conv(xl, wl, *, sizes, stride, plans, schedule, pallas=True):
         xg = gather_axis(xl, "k", dim=1, schedule=schedule)
         out = conv(xg, wg)
     if pc > 1:
-        out = lax.psum(out, "c")
+        out = psum(out, "c", tag="conv_out")
     return out
 
 
@@ -346,7 +346,7 @@ def _conv_bwd_ring2(xwin, wl, gl, *, pb, pk, stride, psp):
 
         dxwin = ring_scatter_reduce("k", produce_dx)
     else:  # Pb == Pk == 2: one b-hop re-delivers the foreign Ker chunk
-        w_arr = lax.ppermute(wl, "b", ring2)
+        w_arr = ppermute(wl, "b", ring2, tag="ring2_redeliver")
         aligned = lax.axis_index("k") == lax.axis_index("b")
 
         def produce_dx(r, t):
@@ -378,7 +378,7 @@ def _conv_bwd_ring2(xwin, wl, gl, *, pb, pk, stride, psp):
 
         dwl = ring_scatter_reduce("b", produce_dw)
     else:  # Pb == Pk == 2: one k-hop re-delivers the foreign In slab
-        x_arr = lax.ppermute(xwin, "k", ring2)
+        x_arr = ppermute(xwin, "k", ring2, tag="ring2_redeliver")
         aligned = lax.axis_index("k") == lax.axis_index("b")
 
         def produce_dw(r, t):
@@ -388,7 +388,7 @@ def _conv_bwd_ring2(xwin, wl, gl, *, pb, pk, stride, psp):
 
         dwl = ring_scatter_reduce("b", produce_dw)
     if psp > 1:  # Ker was replicated over h/w: transpose is a psum
-        dwl = lax.psum(dwl, ("h", "w"))
+        dwl = psum(dwl, ("h", "w"), tag="dker_spatial")
     return dxwin, dwl
 
 
@@ -418,7 +418,7 @@ def _local_conv_bwd(xl, wl, gl, *, sizes, stride, plans, schedule):
         # --- dKer: batch/spatial contraction, b-gather -> b-scatter ------
         dwg = _dw_local(xg, gl, stride=stride)
         if ph * pw > 1:  # Ker was replicated over h/w: transpose is a psum
-            dwg = lax.psum(dwg, ("h", "w"))
+            dwg = psum(dwg, ("h", "w"), tag="dker_spatial")
         dwl = scatter_axis(dwg, "b", dim=1, schedule=schedule) \
             if pb > 1 else dwg
 

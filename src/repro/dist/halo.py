@@ -29,6 +29,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.dist.collectives import axis_size, ppermute
+
 
 def _strip_from_prev(x, axis_name: str, dim: int, lo: int, n: int):
     """Last ``lo`` rows of the concatenation of all preceding shards,
@@ -41,7 +43,7 @@ def _strip_from_prev(x, axis_name: str, dim: int, lo: int, n: int):
         take = min(size, lo - (hop - 1) * size)
         src = lax.slice_in_dim(x, size - take, size, axis=dim)
         perm = [(i, i + hop) for i in range(n - hop)]
-        blocks.append(lax.ppermute(src, axis_name, perm) if perm
+        blocks.append(ppermute(src, axis_name, perm, tag="halo") if perm
                       else jnp.zeros_like(src))
     return blocks[0] if len(blocks) == 1 \
         else jnp.concatenate(blocks, axis=dim)
@@ -58,14 +60,14 @@ def _strip_from_next(x, axis_name: str, dim: int, hi: int, n: int):
         take = min(size, hi - (hop - 1) * size)
         src = lax.slice_in_dim(x, 0, take, axis=dim)
         perm = [(i, i - hop) for i in range(hop, n)]
-        blocks.append(lax.ppermute(src, axis_name, perm) if perm
+        blocks.append(ppermute(src, axis_name, perm, tag="halo") if perm
                       else jnp.zeros_like(src))
     return blocks[0] if len(blocks) == 1 \
         else jnp.concatenate(blocks, axis=dim)
 
 
 def _exchange(x, axis_name: str, spatial_dim: int, lo: int, hi: int):
-    n = lax.psum(1, axis_name)  # static axis size
+    n = axis_size(axis_name)
     parts = []
     if lo > 0:
         parts.append(_strip_from_prev(x, axis_name, spatial_dim, lo, n))
@@ -98,7 +100,7 @@ def halo_accumulate_1d(y, axis_name: str, *, spatial_dim: int,
     if size <= 0:
         raise ValueError(f"cotangent extent {y.shape[spatial_dim]} too "
                          f"small for halo lo={lo} hi={hi}")
-    n = lax.psum(1, axis_name)
+    n = axis_size(axis_name)
     dx = y[_dimslice(y.ndim, spatial_dim, slice(lo, lo + size))]
     if lo > 0:
         hops = -(-lo // size)
@@ -108,7 +110,7 @@ def halo_accumulate_1d(y, axis_name: str, *, spatial_dim: int,
             blk = y[_dimslice(y.ndim, spatial_dim, slice(off, off + take))]
             off += take
             perm = [(i + hop, i) for i in range(n - hop)]
-            recv = (lax.ppermute(blk, axis_name, perm) if perm
+            recv = (ppermute(blk, axis_name, perm, tag="halo_acc") if perm
                     else jnp.zeros_like(blk))
             dx = dx.at[_dimslice(y.ndim, spatial_dim,
                                  slice(size - take, size))].add(recv)
@@ -120,7 +122,7 @@ def halo_accumulate_1d(y, axis_name: str, *, spatial_dim: int,
             blk = y[_dimslice(y.ndim, spatial_dim, slice(off, off + take))]
             off += take
             perm = [(i, i + hop) for i in range(n - hop)]
-            recv = (lax.ppermute(blk, axis_name, perm) if perm
+            recv = (ppermute(blk, axis_name, perm, tag="halo_acc") if perm
                     else jnp.zeros_like(blk))
             dx = dx.at[_dimslice(y.ndim, spatial_dim,
                                  slice(0, take))].add(recv)

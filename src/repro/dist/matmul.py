@@ -55,9 +55,9 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.dist._compat import shard_map
 from repro.dist.collectives import (SCHEDULES, gather_axis, make_mesh,
-                                    ring_reduce, ring_scatter_reduce,
-                                    ring_zip, scatter_axis,
-                                    stream_elems)
+                                    ppermute, psum, ring_reduce,
+                                    ring_scatter_reduce, ring_zip,
+                                    scatter_axis, stream_elems)
 from repro.kernels import ops as kops
 
 AXES = ("m", "n", "c")
@@ -165,7 +165,7 @@ def _local_matmul(xl, wl, *, pm, pn, pc, schedule, pallas=True):
     if schedule == "ring2":
         out = _matmul_fwd_ring2(xl, wl, pm=pm, pn=pn, mm=mm)
         if pc > 1:
-            out = lax.psum(out, "c")
+            out = psum(out, "c", tag="matmul_out")
         return out
     # gather In's contraction sub-shard over n -> full C/Pc slab
     xg = gather_axis(xl, "n", dim=1, schedule=schedule) if pn > 1 else xl
@@ -186,7 +186,7 @@ def _local_matmul(xl, wl, *, pm, pn, pc, schedule, pallas=True):
         wg = gather_axis(wl, "m", dim=0, schedule=schedule)
         out = mm(xg, wg)
     if pc > 1:
-        out = lax.psum(out, "c")
+        out = psum(out, "c", tag="matmul_out")
     return out
 
 
@@ -218,7 +218,7 @@ def _matmul_bwd_ring2(xl, wl, gl, *, pm, pn):
 
         dxl = ring_scatter_reduce("n", produce_dx)
     else:  # Pm == Pn == 2: one m-hop re-delivers the foreign Ker chunk
-        w_arr = lax.ppermute(wl, "m", ring2)
+        w_arr = ppermute(wl, "m", ring2, tag="ring2_redeliver")
         aligned = lax.axis_index("n") == lax.axis_index("m")
 
         def produce_dx(r, t):
@@ -247,7 +247,7 @@ def _matmul_bwd_ring2(xl, wl, gl, *, pm, pn):
 
         dwl = ring_scatter_reduce("m", produce_dw)
     else:  # Pm == Pn == 2: one n-hop re-delivers the foreign In slab
-        x_arr = lax.ppermute(xl, "n", ring2)
+        x_arr = ppermute(xl, "n", ring2, tag="ring2_redeliver")
         aligned = lax.axis_index("n") == lax.axis_index("m")
 
         def produce_dw(r, t):

@@ -30,8 +30,10 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.dist._compat import shard_map
 from jax.sharding import PartitionSpec as P
+
+from repro.dist._compat import shard_map
+from repro.dist.collectives import ppermute, psum
 
 
 def _pipe_fwd_local(stage_fn, axis, n_stages, n_micro, with_stash,
@@ -54,9 +56,9 @@ def _pipe_fwd_local(stage_fn, axis, n_stages, n_micro, with_stash,
         if 0 <= m < n_micro:
             acc = acc.at[m].set(jnp.where(is_last, h_out, 0.0))
         if fwd and t < n_micro + n_stages - 2:
-            recv = lax.ppermute(h_out, axis, fwd)
+            recv = ppermute(h_out, axis, fwd, tag="pipe_fwd")
     # only the last stage holds real outputs; psum replicates them
-    out = lax.psum(acc, axis)
+    out = psum(acc, axis, tag="pipe_out")
     if not with_stash:
         return out
     return out, jnp.stack(stash)[None]  # leading stage dim for P(axis)
@@ -84,10 +86,11 @@ def _pipe_bwd_local(stage_fn, axis, n_stages, n_micro,
         dpt, dh_in = vjp_f(dh_out)
         dp = jax.tree.map(jnp.add, dp, dpt)
         if bwd_perm and t > 0:
-            recv = lax.ppermute(dh_in, axis, bwd_perm)
+            recv = ppermute(dh_in, axis, bwd_perm, tag="pipe_bwd")
         if t < n_micro:  # rank 0 consumed x[t] at tick t
             dx = dx.at[t].set(jnp.where(is_first, dh_in, 0.0))
-    dx = lax.psum(dx, axis)  # only rank 0 holds real input cotangents
+    dx = psum(dx, axis, tag="pipe_dx")  # only rank 0 holds real
+    # input cotangents
     dp = jax.tree.map(lambda a: a[None], dp)  # restore the stage dim
     return dp, dx
 

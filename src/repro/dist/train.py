@@ -29,9 +29,9 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 from jax.sharding import Mesh
 
-from repro.dist.conv2d import (AXES, conv_grid_divides,
+from repro.dist.conv2d import (conv_grid_divides,
                                conv_train_comm_elems, conv_train_mem_elems)
-from repro.dist.matmul import (matmul_grid_divides, matmul_mesh_from_conv,
+from repro.dist.matmul import (matmul_grid_divides,
                                matmul_train_comm_elems,
                                matmul_train_mem_elems)
 from repro.models.cnn import loss_cnn

@@ -16,7 +16,7 @@ import dataclasses
 import signal
 import threading
 import time
-from typing import Callable, List, Optional
+from typing import Callable, List
 
 
 @dataclasses.dataclass
@@ -54,8 +54,9 @@ class StragglerMonitor:
     def observe(self, step: int, dt: float) -> bool:
         """Returns True when mitigation should trigger."""
         is_slow = (self.stats.n >= self.warmup
-                   and dt > self.stats.ema + self.z * max(self.stats.std,
-                                                          0.05 * self.stats.ema))
+                   and dt > self.stats.ema
+                   + self.z * max(self.stats.std,
+                                  0.05 * self.stats.ema))
         if is_slow:
             self.consecutive += 1
             self.events.append({"step": step, "dt": dt,

@@ -14,7 +14,6 @@ block is floored at min(N_c, 256) and the Eq. 4 budget reduced accordingly.
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Tuple
 
 from repro.core import cost_model, tile_optimizer

@@ -23,9 +23,8 @@ from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.configs import ARCH_IDS, ALIASES, get_config
+from repro.configs import ALIASES, get_config
 from repro.launch.hlo_analysis import analyze_hlo
 from repro.launch.mesh import make_production_mesh
 from repro.launch.shapes import (SHAPES, cache_struct, cell_supported,
@@ -72,43 +71,47 @@ def _shape_bytes(text: str) -> int:
 def parse_collectives(hlo_text: str) -> Dict[str, Any]:
     """Per-op-type wire-byte totals from the post-SPMD HLO (per device).
 
+    Walks the module through ``HloModule.walk`` so collectives inside
+    ``while``/``fori_loop`` bodies count once per trip (rings of size
+    >= 3 compile to loops — a flat line scan undercounts them by a
+    factor of g-1); counts are trip-multiplied too.
+
     Ring-model wire bytes per device for a group of size g over payload V:
       all-gather: V*(g-1)/g (V = gathered result)
-      reduce-scatter: V*(g-1)/g (V = input)
+      reduce-scatter: V*(g-1) (V = the scattered result shard)
       all-reduce: 2*V*(g-1)/g
       all-to-all: V*(g-1)/g
       collective-permute: V
     """
+    from repro.launch.hlo_analysis import HloModule, shape_bytes
     out = {k: 0.0 for k in ("all-reduce", "all-gather", "reduce-scatter",
                             "all-to-all", "collective-permute")}
-    counts = {k: 0 for k in out}
-    for line in hlo_text.splitlines():
-        line = line.strip()
-        m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|\S+?)\s+"
-                     r"(all-reduce|all-gather|reduce-scatter|all-to-all|"
-                     r"collective-permute)(?:-start)?\(", line)
-        if not m:
+    counts = {k: 0.0 for k in out}
+    mod = HloModule(hlo_text)
+    for _comp, op, mult in mod.walk():
+        oc = op.opcode
+        if not oc.startswith(tuple(out)) or oc.endswith("-done"):
             continue
-        result_type, op = m.group(1), m.group(2)
-        gm = re.search(r"replica_groups=\{?\{([\d,]+)\}", line)
+        kind = next(k for k in out if oc.startswith(k))
+        gm = re.search(r"replica_groups=\{?\{([\d,]+)\}", op.rest)
         if gm:
             g = len(gm.group(1).split(","))
         else:
-            gm2 = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+            gm2 = re.search(r"replica_groups=\[(\d+),(\d+)\]", op.rest)
             g = int(gm2.group(2)) if gm2 else 2
-        v = _shape_bytes(result_type)
-        if op == "all-gather":
+        v = shape_bytes(op.rtype)
+        if kind == "all-gather":
             wire = v * (g - 1) / max(g, 1)
-        elif op == "reduce-scatter":
+        elif kind == "reduce-scatter":
             wire = v * (g - 1)  # result is the scattered shard: in = v*g
-        elif op == "all-reduce":
+        elif kind == "all-reduce":
             wire = 2 * v * (g - 1) / max(g, 1)
-        elif op == "all-to-all":
+        elif kind == "all-to-all":
             wire = v * (g - 1) / max(g, 1)
         else:  # collective-permute
             wire = v
-        out[op] += wire
-        counts[op] += 1
+        out[kind] += wire * mult
+        counts[kind] += mult
     return {"wire_bytes": out, "counts": counts,
             "total_wire_bytes": sum(out.values())}
 

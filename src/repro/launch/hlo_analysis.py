@@ -27,9 +27,14 @@ import re
 from typing import Dict, List, Optional, Tuple
 
 _DTYPE_BYTES = {
-    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2,
+    # 8-bit float family (fn/fnuz/b11 variants all occupy one byte)
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1,
+    "f8e4m3fnuz": 1, "f8e5m2fnuz": 1, "f8e4m3b11fnuz": 1, "f8e8m0fnu": 1,
     "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
     "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+    # sub-byte ints: XLA packs two per byte
+    "s4": 0.5, "u4": 0.5, "s2": 0.25, "u2": 0.25,
 }
 _SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
 _OP_RE = re.compile(
@@ -44,6 +49,69 @@ _GROUPS_ITOA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
 _GROUPS_EXPL_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
 _CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
 _CONST_RE = re.compile(r"=\s*s32\[\]\s*constant\((\d+)\)")
+
+_PAIRS_RE = re.compile(r"source_target_pairs=\{((?:\{\d+,\d+\},?)*)\}")
+_PAIR_RE = re.compile(r"\{(\d+),(\d+)\}")
+_GROUPS_SEG_RE = re.compile(r"replica_groups=\{((?:\{[\d,]*\},?)*)\}")
+_GROUP_RE = re.compile(r"\{([\d,]*)\}")
+_GROUPS_IOTA_V2_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]\s*(?:<=\s*\[([\d,]+)\])?"
+    r"\s*(?:T\(([\d,]+)\))?")
+
+
+def source_target_pairs(rest: str):
+    """``((src, tgt), ...)`` of a collective-permute op line, or ``None``
+    when the attribute is absent."""
+    m = _PAIRS_RE.search(rest)
+    if not m:
+        return None
+    return tuple((int(a), int(b)) for a, b in _PAIR_RE.findall(m.group(1)))
+
+
+def replica_groups(rest: str):
+    """Full replica groups of a collective op line as a tuple of
+    device-id tuples: explicit ``{{0,2},{1,3}}`` form, or the iota-v2
+    ``[n,g]<=[dims]T(perm)`` form expanded; ``None`` when absent."""
+    m = _GROUPS_SEG_RE.search(rest)
+    if m:
+        return tuple(
+            tuple(int(d) for d in g.split(",") if d)
+            for g in _GROUP_RE.findall(m.group(1)))
+    m = _GROUPS_IOTA_V2_RE.search(rest)
+    if m:
+        n_groups, g_size = int(m.group(1)), int(m.group(2))
+        total = n_groups * g_size
+        ids = list(range(total))
+        if m.group(3):  # reshape-transpose-flatten iota semantics
+            dims = [int(d) for d in m.group(3).split(",")]
+            perm = ([int(d) for d in m.group(4).split(",")] if m.group(4)
+                    else list(range(len(dims))))
+            strides = [1] * len(dims)
+            for i in range(len(dims) - 2, -1, -1):
+                strides[i] = strides[i + 1] * dims[i + 1]
+            coords = []
+            for flat in range(total):
+                c, r = [], flat
+                for s in strides:
+                    c.append(r // s)
+                    r %= s
+                coords.append(c)
+            ids = sorted(range(total),
+                         key=lambda f: [coords[f][p] for p in perm])
+            # flatten order of the transposed array: position -> device id
+            pos = [0] * total
+            tdims = [dims[p] for p in perm]
+            tstrides = [1] * len(tdims)
+            for i in range(len(tdims) - 2, -1, -1):
+                tstrides[i] = tstrides[i + 1] * tdims[i + 1]
+            for f in range(total):
+                tc = [coords[f][p] for p in perm]
+                pos[sum(c * s for c, s in zip(tc, tstrides))] = f
+            ids = pos
+        return tuple(tuple(ids[i * g_size:(i + 1) * g_size])
+                     for i in range(n_groups))
+    return None
+
 
 ELEMENTWISE_FREE = {
     "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
@@ -65,7 +133,7 @@ def shape_elems(type_str: str) -> int:
 
 
 def shape_bytes(type_str: str) -> int:
-    total = 0
+    total = 0.0
     for m in _SHAPE_RE.finditer(type_str):
         dt = m.group(1)
         if dt not in _DTYPE_BYTES:
@@ -75,7 +143,9 @@ def shape_bytes(type_str: str) -> int:
             if d:
                 n *= int(d)
         total += n * _DTYPE_BYTES[dt]
-    return total
+    # sub-byte dtypes (s4/u4/s2/u2) pack >1 element per byte; a buffer
+    # still occupies whole bytes
+    return int(-(-total // 1)) if total else 0
 
 
 @dataclasses.dataclass
@@ -255,6 +325,41 @@ class HloModule:
         if m:
             return len(m.group(1).split(","))
         return 2
+
+    # ---------------------------------------------------------------- walk
+    def walk(self, comp: Optional[str] = None, mult: float = 1.0):
+        """Yield ``(comp_name, op, multiplier)`` for every op reachable
+        from ``comp`` (default: entry), descending into while bodies
+        (multiplier x trip count), conditionals (every branch), calls and
+        fusions — the shared traversal under the collective-extraction
+        and accounting passes."""
+        comp = comp or self.entry
+        yield from self._walk(comp, mult, frozenset())
+
+    def _walk(self, comp: str, mult: float, seen):
+        if comp in seen or comp not in self.comps:
+            return
+        seen = seen | {comp}
+        for op in self.comps[comp]:
+            yield comp, op, mult
+            oc = op.opcode
+            if oc == "while":
+                m = _WHILE_RE.search(op.rest)
+                if m:
+                    trips = self._trip_count(m.group(1))
+                    yield from self._walk(m.group(1), mult * (trips + 1),
+                                          seen)
+                    yield from self._walk(m.group(2), mult * trips, seen)
+            elif oc == "conditional":
+                m = _BRANCHES_RE.search(op.rest)
+                if m:
+                    for c in m.group(1).split(","):
+                        yield from self._walk(c.strip().lstrip("%"), mult,
+                                              seen)
+            elif oc in ("call", "async-start", "fusion"):
+                m = _CALLS_RE.search(op.rest) or _TO_APPLY_RE.search(op.rest)
+                if m:
+                    yield from self._walk(m.group(1), mult, seen)
 
     # ------------------------------------------------------------- analyze
     def analyze(self, comp: Optional[str] = None, *,

@@ -12,7 +12,7 @@ sliding-window pattern); pure full-attention archs skip it (DESIGN.md §5).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -15,7 +15,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.ckpt.checkpointer import CheckpointManager
 from repro.configs import get_config
@@ -23,9 +22,8 @@ from repro.data.pipeline import DataConfig, Prefetcher, SyntheticTokens
 from repro.fault.monitor import EmergencySaver, StragglerMonitor
 from repro.launch.mesh import make_host_mesh
 from repro.models.api import model_fns
-from repro.parallel import sharding as shd
 from repro.train.optim import AdamW, cosine_schedule
-from repro.train.step import TrainState, init_train_state, make_train_step
+from repro.train.step import init_train_state, make_train_step
 
 
 def main():

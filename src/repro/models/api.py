@@ -11,7 +11,7 @@ Every architecture exposes:
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict
+from typing import Callable, Dict
 
 from repro.models import encdec, hybrid, lm, ssm_lm
 from repro.models.config import ModelConfig

@@ -11,7 +11,7 @@ import jax.numpy as jnp
 @dataclasses.dataclass(frozen=True)
 class ModelConfig:
     arch_id: str
-    family: str                      # dense | moe | ssm | hybrid | encdec | vlm
+    family: str              # dense | moe | ssm | hybrid | encdec | vlm
     n_layers: int
     d_model: int
     n_heads: int

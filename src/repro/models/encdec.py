@@ -8,7 +8,7 @@ cross-attention, scan-over-layers, KV-cache decode (self + cross caches).
 
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -10,7 +10,7 @@ conv/SSD states.
 
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -127,7 +127,8 @@ def init_cache_hybrid(cfg: ModelConfig, batch: int, max_seq: int) -> Dict:
 
 
 def _shared_block_cached(shared: Dict, h: jax.Array, ck, cv, *,
-                         cfg: ModelConfig, pos) -> Tuple[jax.Array, jax.Array, jax.Array]:
+                         cfg: ModelConfig, pos,
+                         ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     b = h.shape[0]
     hd, nh, g = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
     x = L.rmsnorm(h, shared["ln1"], cfg.norm_eps)

@@ -10,7 +10,6 @@ KV cache written via dynamic_update_slice.
 
 from __future__ import annotations
 
-import functools
 from typing import Dict, Optional, Tuple
 
 import jax
@@ -65,7 +64,8 @@ def layer_windows(cfg: ModelConfig) -> jax.Array:
 # --------------------------------------------------------------- forward --
 
 def _block_apply(blk: Dict, h: jax.Array, *, cfg: ModelConfig,
-                 positions: jax.Array, window: jax.Array) -> Tuple[jax.Array, jax.Array]:
+                 positions: jax.Array, window: jax.Array,
+                 ) -> Tuple[jax.Array, jax.Array]:
     mrope = cfg.mrope_sections if cfg.mrope_sections[0] else None
     a = L.attention(blk["attn"], L.rmsnorm(h, blk["ln1"], cfg.norm_eps),
                     n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
@@ -144,7 +144,8 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> Dict:
 
 def _cached_attention(blk: Dict, h: jax.Array, cache_k, cache_v, *,
                       cfg: ModelConfig, pos: jax.Array,
-                      window: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+                      window: jax.Array,
+                      ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Single-token attention against the cache.  h: [B,1,d];
     cache_k/v: [B,Smax,G,hd]; pos: scalar current length."""
     b = h.shape[0]

@@ -27,7 +27,6 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.problem import ConvProblem
-from repro.core.sharding_synthesis import synthesize_layer
 from repro.models.config import ModelConfig
 
 # HBM budget per chip (elements, bf16) for the node-level synthesis

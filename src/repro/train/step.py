@@ -22,8 +22,6 @@ parallel/sharding.py.  Communication structure:
 
 from __future__ import annotations
 
-import dataclasses
-import functools
 from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
 
 import jax

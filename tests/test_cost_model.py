@@ -1,8 +1,6 @@
 """Paper core: analytic cost model vs simulated tiled execution, and the
 distributed-cost offset identity from Sec. 2.2."""
 
-import math
-
 import pytest
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st

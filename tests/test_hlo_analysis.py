@@ -1,0 +1,128 @@
+"""Direct units for ``launch.hlo_analysis``: the dtype byte table, the
+replica-group / source-target-pair parsers, the loop-aware ``walk``
+traversal, and ``launch.dryrun.parse_collectives``' agreement with it
+on loop-body collectives.  Pure text parsing — no devices, no tracing.
+"""
+
+import pytest
+
+from repro.launch.dryrun import parse_collectives
+from repro.launch.hlo_analysis import (HloModule, analyze_hlo,
+                                       replica_groups, shape_bytes,
+                                       shape_elems, source_target_pairs)
+
+pytestmark = pytest.mark.static
+
+
+# ------------------------------------------------------------ dtype table
+
+@pytest.mark.parametrize("type_str,expect", [
+    ("f32[4,4]", 64), ("f64[2]", 16), ("f16[8]", 16), ("bf16[8]", 16),
+    ("s8[16]", 16), ("u8[3]", 3), ("s32[2,2]", 16), ("s64[1]", 8),
+    ("pred[8]", 8),                       # bool is one byte per element
+    ("f8e4m3fn[10]", 10), ("f8e5m2[4]", 4), ("f8e4m3[5]", 5),
+    ("f8e5m2fnuz[7]", 7),
+    ("s4[4]", 2), ("u4[8]", 4),           # packed two per byte
+    ("s4[3]", 2),                         # sub-byte buffers round up
+    ("s2[4]", 1),
+    ("f32[]", 4),                         # scalar
+    ("(f32[2,2], s8[4])", 20),            # tuple shapes sum
+    ("(f32[2,2], token[])", 16),          # unknown dtypes contribute 0
+    ("c64[2]", 16), ("c128[2]", 32),
+])
+def test_shape_bytes_table(type_str, expect):
+    assert shape_bytes(type_str) == expect
+
+
+def test_shape_elems():
+    assert shape_elems("f32[4,4]") == 16
+    assert shape_elems("bf16[]") == 1
+    assert shape_elems("(f32[2,3], s8[4])") == 10
+    assert shape_elems("s4[5]") == 5     # elements, not bytes
+
+
+# ------------------------------------------------- collective attr parsers
+
+def test_source_target_pairs():
+    rest = ("%x), channel_id=1, "
+            "source_target_pairs={{0,1},{1,2},{2,3},{3,0}}, "
+            "backend_config=...")
+    assert source_target_pairs(rest) == ((0, 1), (1, 2), (2, 3), (3, 0))
+    assert source_target_pairs("%x), replica_groups={{0,1}}") is None
+
+
+def test_replica_groups_explicit():
+    rest = "%x), replica_groups={{0,2},{1,3}}, use_global_device_ids=true"
+    assert replica_groups(rest) == ((0, 2), (1, 3))
+    assert replica_groups("%x), dimensions={0}") is None
+
+
+def test_replica_groups_iota_v2():
+    # plain iota: consecutive ids
+    assert replica_groups("%x), replica_groups=[2,2]<=[4]") \
+        == ((0, 1), (2, 3))
+    # reshape-transpose iota: [2,2]<=[2,2]T(1,0) strides the groups
+    assert replica_groups("%x), replica_groups=[2,2]<=[2,2]T(1,0)") \
+        == ((0, 2), (1, 3))
+    assert replica_groups("%x), replica_groups=[1,4]<=[4]") \
+        == ((0, 1, 2, 3),)
+
+
+# ---------------------------------------------------- loop-aware traversal
+
+LOOP_HLO = """
+HloModule synthetic_ring
+
+%body (p: (s32[], f32[128])) -> (s32[], f32[128]) {
+  %p = (s32[], f32[128]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[128] get-tuple-element(%p), index=1
+  %cp = f32[128] collective-permute(%x), source_target_pairs={{0,1},{1,2},{2,3},{3,0}}
+  %one = s32[] constant(1)
+  %ni = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[128]) tuple(%ni, %cp)
+}
+
+%cond (p: (s32[], f32[128])) -> pred[] {
+  %p = (s32[], f32[128]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %trips = s32[] constant(3)
+  ROOT %lt = pred[] compare(%i, %trips), direction=LT
+}
+
+ENTRY %main (x: f32[128]) -> f32[128] {
+  %x = f32[128] parameter(0)
+  %init = s32[] constant(0)
+  %tup = (s32[], f32[128]) tuple(%init, %x)
+  %w = (s32[], f32[128]) while(%tup), condition=%cond, body=%body
+  %ag = f32[512] all-gather(%x), replica_groups={{0,1,2,3}}, dimensions={0}
+  ROOT %out = f32[128] get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_walk_multiplies_loop_bodies():
+    mod = HloModule(LOOP_HLO)
+    mults = {op.name: mult for _, op, mult in mod.walk()
+             if op.opcode.startswith(("collective-permute", "all-gather"))}
+    assert mults["cp"] == 3.0       # body x trip count
+    assert mults["ag"] == 1.0       # entry-level op
+
+
+def test_parse_collectives_counts_loop_trips():
+    rep = parse_collectives(LOOP_HLO)
+    # ppermute: 128 f32 = 512 B per hop, 3 hops
+    assert rep["wire_bytes"]["collective-permute"] == 512 * 3
+    assert rep["counts"]["collective-permute"] == 3.0
+    # all-gather: 512 f32 = 2048 B result, group of 4 -> V*(g-1)/g
+    assert rep["wire_bytes"]["all-gather"] == 2048 * 3 / 4
+    assert rep["counts"]["all-gather"] == 1.0
+    # and the two analyzers agree on the total
+    assert rep["total_wire_bytes"] == pytest.approx(
+        analyze_hlo(LOOP_HLO)["total_wire_bytes"])
+
+
+def test_analyze_hlo_matches_walk_totals():
+    rep = analyze_hlo(LOOP_HLO)
+    assert rep["wire_bytes"]["collective-permute"] == 512 * 3
+    assert rep["coll_counts"]["collective-permute"] == 3.0

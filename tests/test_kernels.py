@@ -5,12 +5,12 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core.problem import resnet50_layers
 from repro.kernels.conv2d import conv2d_pallas
 from repro.kernels.matmul import matmul_pallas
 from repro.kernels.ops import conv2d_same, math_gcd_block, matmul
-from repro.kernels.ref import ref_conv2d, ref_flash_attention, ref_matmul
+from repro.kernels.ref import ref_conv2d, ref_matmul
 from repro.kernels.tiling import plan_blocks
-from repro.core.problem import ConvProblem, resnet50_layers
 
 
 def _tol(dtype):

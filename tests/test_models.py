@@ -8,10 +8,10 @@ import pytest
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
+from repro.kernels.ref import ref_flash_attention
 from repro.models import layers as L
 from repro.models import moe as moe_mod
 from repro.models import ssm
-from repro.kernels.ref import ref_flash_attention
 
 
 def test_blockwise_attention_matches_dense():

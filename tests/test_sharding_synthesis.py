@@ -4,12 +4,11 @@ decisions, divisibility fallbacks, spec construction."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
+from repro.configs import get_config
 from repro.core.problem import ConvProblem
 from repro.core.sharding_synthesis import synthesize_layer
-from repro.configs import get_config
 from repro.models.api import model_fns
 from repro.parallel import sharding as shd
 

@@ -1,7 +1,5 @@
 """Closed-form Table 1/2 solutions vs brute force; regime classification."""
 
-import math
-
 import pytest
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
@@ -9,7 +7,7 @@ from hypothesis import given, settings, strategies as st
 from repro.core import cost_model, grid, tile_optimizer
 from repro.core.problem import ConvProblem, resnet50_layers
 from repro.core.tile_optimizer import (ALGO_25D, ALGO_2D, ALGO_3D,
-                                       brute_force, solve, solve_closed_form,
+                                       brute_force, solve,
                                        table1_cost, table2_cost)
 
 

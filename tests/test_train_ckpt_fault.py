@@ -11,8 +11,8 @@ import pytest
 from repro.ckpt import checkpointer as ck
 from repro.data.pipeline import DataConfig, Prefetcher, SyntheticTokens
 from repro.fault.monitor import (ElasticPlan, EmergencySaver, Heartbeat,
-                                 StepStats, StragglerMonitor)
-from repro.train.optim import AdamW, cosine_schedule, global_norm
+                                 StragglerMonitor)
+from repro.train.optim import AdamW, cosine_schedule
 from repro.train.step import init_train_state, make_train_step
 
 
