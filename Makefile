@@ -2,7 +2,7 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test fast-test dist-test grad-test static-test verify-dist lint \
-	demo bench bench-full
+	demo autotune bench bench-full
 
 test:  ## tier-1 verify (full suite, fail-fast)
 	$(PY) -m pytest -x -q
@@ -32,6 +32,9 @@ lint:  ## ruff if available, else the raw-collective AST lint only
 
 demo:  ## end-to-end distributed conv demo on 8 virtual devices
 	$(PY) examples/distributed_conv_demo.py
+
+autotune:  ## warm the local-kernel plan cache (.repro_autotune.json)
+	$(PY) -m repro.kernels.autotune
 
 bench:  ## CI smoke benchmark: writes BENCH_comm.json + BENCH_kernels.json
 	$(PY) benchmarks/run.py --quick

@@ -1,13 +1,27 @@
-"""Two-level tiling at the chip level: Pallas kernels with paper-planned
-BlockSpecs — wall time per call (CPU jit; interpret mode for the Pallas
-path, so the modeled HBM traffic ratio is the meaningful derived column —
-the quantity the paper's Eq. 4 actually optimizes).
+"""Chip-level local-kernel benchmark: the paper-plan baseline next to the
+autotuned winner, per ResNet layer shape.
 
-``run_json(quick=...)`` returns the ``BENCH_kernels.json`` records
-(schema: ``{name, grid, schedule, wire_bytes, peak_elems, wall_ms}`` —
-``wire_bytes`` here is the modeled HBM<->VMEM traffic of the planned
-tiling, the chip-level analogue of the distributed wire volume, and
-``grid`` carries the block plan)."""
+Each layer yields a *pair* of ``BENCH_kernels.json`` records (schema:
+``{name, grid, schedule, wire_bytes, peak_elems, wall_ms, impl, stencil,
+stride}``):
+
+* ``schedule="paper-plan"`` — the static dispatch baseline (the XLA conv
+  the paper-plan path falls back to on CPU; ``grid`` carries the planned
+  blocks and ``wire_bytes`` the modeled HBM<->VMEM traffic of the planned
+  tiling — the chip-level analogue of the distributed wire volume, the
+  quantity the paper's Eq. 4 actually optimizes);
+* ``schedule="autotuned"`` — the ``kernels.autotune`` best-of winner for
+  the same shape, dispatched through ``kops.local_conv2d`` exactly as the
+  distributed schedules do, with its winning ``impl`` name
+  (``direct`` | ``winograd`` | ``im2col`` | ``xla``) and measured wall
+  time.
+
+The ``bench`` pytest marker (``tests/test_autotune.py``) asserts the
+autotuned record is never slower than the paper-plan baseline beyond
+tolerance on the 3x3 stride-1 shapes, and strictly faster on at least
+one — both records come from the same process/machine, so the comparison
+is wall-clock-consistent.
+"""
 
 from __future__ import annotations
 
@@ -17,8 +31,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.problem import resnet50_layers
+from repro.kernels import ops as kops
 from repro.kernels import tiling
 from repro.kernels.ops import conv2d_same
+
+QUICK_LAYERS = ("res2a_2b", "res5a_2b")
+FULL_LAYERS = ("conv1", "res2a_2b", "res3a_2b", "res4a_2b", "res5a_2b")
 
 
 def _time_us(fn, *args, reps=3):
@@ -33,25 +51,35 @@ def _time_us(fn, *args, reps=3):
 def _records(quick: bool) -> list:
     recs = []
     key = jax.random.PRNGKey(0)
-    n_layers = 2 if quick else 4
-    for name, p in list(resnet50_layers(batch=4).items())[:n_layers]:
-        if p.Nr == 1:
-            continue
+    names = QUICK_LAYERS if quick else FULL_LAYERS
+    layers = resnet50_layers(batch=4)
+    for name in names:
+        p = layers[name]
+        # benched as the stride-1 SAME slab contraction the dist
+        # schedules execute at this layer's output extents
         x = jax.random.normal(key, (p.Nb, p.Nc, p.Nh, p.Nw), jnp.float32)
         w = jax.random.normal(key, (p.Nk, p.Nc, p.Nr, p.Ns), jnp.float32)
-        t_xla = _time_us(lambda a, b: conv2d_same(a, b, use_pallas=False),
-                         x, w)
         plan = tiling.plan_blocks(p)
         naive = tiling.plan_blocks(p, vmem_elems=2 * 128 * 128)
-        recs.append({
-            "name": f"kernel/{name}",
+        common = {
             "grid": [plan.block_bhw, plan.block_k, plan.block_c],
-            "schedule": "paper-plan",
             "wire_bytes": plan.hbm_traffic * 4,
             "peak_elems": plan.vmem_elems,
-            "wall_ms": t_xla / 1e3,
             "min_tile_traffic_ratio": naive.hbm_traffic / plan.hbm_traffic,
-        })
+            "stencil": [p.Nr, p.Ns],
+            "stride": [1, 1],
+        }
+        t_xla = _time_us(lambda a, b: conv2d_same(a, b, use_pallas=False),
+                         x, w)
+        recs.append({"name": f"kernel/{name}", "schedule": "paper-plan",
+                     "impl": "xla", "wall_ms": t_xla / 1e3, **common})
+        impl = kops.select_conv_impl(x.shape, w.shape, x.dtype, (1, 1),
+                                     "SAME")
+        t_auto = _time_us(jax.jit(
+            lambda a, b: kops.local_conv2d(a, b, stride=(1, 1),
+                                           padding="SAME")), x, w)
+        recs.append({"name": f"kernel/{name}", "schedule": "autotuned",
+                     "impl": impl, "wall_ms": t_auto / 1e3, **common})
     return recs
 
 

@@ -1,16 +1,25 @@
-"""Source-level AST lint: raw ``jax.lax`` collectives are forbidden
-outside ``repro/dist/collectives.py``.
+"""Source-level AST lint for the repo's two dispatch chokepoints:
 
-The accounted wrappers there (:func:`repro.dist.collectives.ppermute`
-etc.) are how every collective stays attributable to a mesh axis — a
-raw ``lax.psum`` elsewhere would be invisible to the static verifier's
-trace-vs-IR cross-check.  This lint parses every source file under
-``src/repro`` and flags call sites of the raw primitives, resolving the
+1. **Raw collectives** — ``jax.lax`` collectives are forbidden outside
+   ``repro/dist/collectives.py``.  The accounted wrappers there
+   (:func:`repro.dist.collectives.ppermute` etc.) are how every
+   collective stays attributable to a mesh axis — a raw ``lax.psum``
+   elsewhere would be invisible to the static verifier's trace-vs-IR
+   cross-check.  Call sites opt out with ``# raw-collective-ok``.
+
+2. **Raw kernels** — the Pallas kernel modules (``kernels.matmul``,
+   ``kernels.conv2d``, ``kernels.winograd``, ``kernels.gemm_conv``) may
+   only be imported inside ``repro/kernels/``.  Everything else reaches
+   them through the ``kernels.ops`` dispatchers, so the autotuned
+   best-of selector (and its ``REPRO_DIST_PALLAS`` / ``REPRO_AUTOTUNE``
+   kill switches) cannot be silently bypassed.  Import sites opt out
+   with ``# raw-kernel-ok``.
+
+Both rules parse every source file under ``src/repro``, resolving the
 usual import spellings (``jax.lax.psum``, ``lax.psum`` via ``from jax
-import lax`` / ``import jax.lax as lax``, and ``from jax.lax import
-psum [as p]``).  A call site can opt out with a trailing
-``# raw-collective-ok`` comment (e.g. numerics tests embedded in
-docs-adjacent scripts).
+import lax`` / ``import jax.lax as lax``, ``from jax.lax import psum
+[as p]``; ``import repro.kernels.matmul``, ``from repro.kernels import
+matmul``, ``from repro.kernels.matmul import matmul_pallas``).
 
 Run directly: ``python -m repro.analysis.astlint [root]``.
 """
@@ -35,26 +44,58 @@ ALLOWED_SUFFIXES = (os.path.join("dist", "collectives.py"),)
 
 PRAGMA = "raw-collective-ok"
 
+#: Kernel mechanism modules reachable only through ``kernels.ops``.
+RAW_KERNEL_MODULES = frozenset({"matmul", "conv2d", "winograd", "gemm_conv"})
+KERNEL_PKG = "repro.kernels"
+
+#: Directory whose files may import the raw kernel modules.
+KERNEL_ALLOWED_DIR = os.path.join("repro", "kernels") + os.sep
+
+KERNEL_PRAGMA = "raw-kernel-ok"
+
 
 @dataclasses.dataclass(frozen=True)
 class AstFinding:
     path: str
     line: int
-    name: str     # the jax.lax primitive called
+    name: str     # the primitive called / kernel module imported
+    kind: str = "collective"
 
     def __str__(self):
+        if self.kind == "kernel":
+            return (f"{self.path}:{self.line}: raw kernel import "
+                    f"{KERNEL_PKG}.{self.name} — dispatch through "
+                    f"repro.kernels.ops so the autotuned selector stays "
+                    f"in the loop")
         return (f"{self.path}:{self.line}: raw jax.lax.{self.name} — "
                 f"use repro.dist.collectives.{self.name} so the "
                 f"collective stays accounted")
 
 
 class _Visitor(ast.NodeVisitor):
-    def __init__(self, source_lines):
+    def __init__(self, source_lines, *, check_kernels=True):
         self.lax_aliases = set()        # names bound to the jax.lax module
         self.jax_aliases = {"jax"}      # names bound to the jax module
         self.direct = {}                # local name -> raw primitive name
         self.calls: List[Tuple[int, str]] = []
+        self.kernel_imports: List[Tuple[int, str]] = []
+        self._check_kernels = check_kernels
         self._lines = source_lines
+
+    def _line_has(self, lineno: int, pragma: str) -> bool:
+        line = self._lines[lineno - 1] if lineno - 1 < len(self._lines) \
+            else ""
+        return pragma in line
+
+    def _kernel_import(self, node, module: str) -> None:
+        if not self._check_kernels:
+            return
+        prefix = KERNEL_PKG + "."
+        if module.startswith(prefix) \
+                and module[len(prefix):].split(".")[0] in RAW_KERNEL_MODULES \
+                and not self._line_has(node.lineno, KERNEL_PRAGMA):
+            self.kernel_imports.append(
+                (node.lineno, module[len(prefix):].split(".")[0]))
 
     def visit_Import(self, node):
         for a in node.names:
@@ -62,6 +103,7 @@ class _Visitor(ast.NodeVisitor):
                 self.jax_aliases.add(a.asname or "jax")
             elif a.name == "jax.lax" and a.asname:
                 self.lax_aliases.add(a.asname)
+            self._kernel_import(node, a.name)
         self.generic_visit(node)
 
     def visit_ImportFrom(self, node):
@@ -73,6 +115,13 @@ class _Visitor(ast.NodeVisitor):
             for a in node.names:
                 if a.name in RAW_COLLECTIVES:
                     self.direct[a.asname or a.name] = a.name
+        elif node.module == KERNEL_PKG and self._check_kernels:
+            for a in node.names:
+                if a.name in RAW_KERNEL_MODULES \
+                        and not self._line_has(node.lineno, KERNEL_PRAGMA):
+                    self.kernel_imports.append((node.lineno, a.name))
+        elif node.module:
+            self._kernel_import(node, node.module)
         self.generic_visit(node)
 
     def _resolve(self, func) -> str:
@@ -93,12 +142,13 @@ class _Visitor(ast.NodeVisitor):
 
     def visit_Call(self, node):
         name = self._resolve(node.func)
-        if name:
-            line = self._lines[node.lineno - 1] \
-                if node.lineno - 1 < len(self._lines) else ""
-            if PRAGMA not in line:
-                self.calls.append((node.lineno, name))
+        if name and not self._line_has(node.lineno, PRAGMA):
+            self.calls.append((node.lineno, name))
         self.generic_visit(node)
+
+
+def _in_kernels_dir(path: str) -> bool:
+    return KERNEL_ALLOWED_DIR in os.path.abspath(path)
 
 
 def lint_file(path: str) -> List[AstFinding]:
@@ -109,22 +159,27 @@ def lint_file(path: str) -> List[AstFinding]:
     except SyntaxError as e:
         return [AstFinding(path=path, line=e.lineno or 0,
                            name=f"<syntax error: {e.msg}>")]
-    v = _Visitor(src.splitlines())
+    check_collectives = not any(path.endswith(suf)
+                                for suf in ALLOWED_SUFFIXES)
+    v = _Visitor(src.splitlines(), check_kernels=not _in_kernels_dir(path))
     v.visit(tree)
-    return [AstFinding(path=path, line=ln, name=nm) for ln, nm in v.calls]
+    findings = []
+    if check_collectives:
+        findings += [AstFinding(path=path, line=ln, name=nm)
+                     for ln, nm in v.calls]
+    findings += [AstFinding(path=path, line=ln, name=nm, kind="kernel")
+                 for ln, nm in v.kernel_imports]
+    return sorted(findings, key=lambda f: f.line)
 
 
 def lint_tree(root: str) -> List[AstFinding]:
-    """Lint every ``.py`` under ``root`` except the allowed files."""
+    """Lint every ``.py`` under ``root``."""
     findings: List[AstFinding] = []
     for dirpath, _, files in sorted(os.walk(root)):
         for fn in sorted(files):
             if not fn.endswith(".py"):
                 continue
-            path = os.path.join(dirpath, fn)
-            if any(path.endswith(suf) for suf in ALLOWED_SUFFIXES):
-                continue
-            findings.extend(lint_file(path))
+            findings.extend(lint_file(os.path.join(dirpath, fn)))
     return findings
 
 

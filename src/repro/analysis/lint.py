@@ -65,6 +65,7 @@ def main(argv=None) -> int:
             f"--xla_force_host_platform_device_count={args.devices} "
             + flags).strip()
     os.environ.setdefault("REPRO_DIST_PALLAS", "0")
+    os.environ.setdefault("REPRO_AUTOTUNE", "0")
 
     from repro.analysis import astlint, verify
 

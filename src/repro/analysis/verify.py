@@ -269,6 +269,10 @@ def run_matrix(*, conv_grids=DEFAULT_CONV_GRIDS,
     plus (``include_variants``) the stride/VALID-padding and
     ``save_gathered`` variants on the flagship 2.5D grids."""
     os.environ.setdefault("REPRO_DIST_PALLAS", "0")
+    # the verifier proves the paper-plan schedules; the runtime autotuner
+    # would both perturb the footprint and execute kernels during what is
+    # otherwise a compile-only pass
+    os.environ.setdefault("REPRO_AUTOTUNE", "0")
     reports: List[CellReport] = []
 
     def emit(cells):

@@ -457,8 +457,10 @@ def _conv2d_raw(x, w, mesh, schedule, stride, plans, pallas=True):
     """The forward shard_map itself — differentiable natively, in which
     case JAX saves the gathered operands as residuals and the backward
     transposes each collective in place (zero gather-replay traffic);
-    the ``save_gathered=True`` memory-for-wire endpoint (which forces the
-    XLA local ops: the Pallas kernels are primal-only)."""
+    this is the ``save_gathered=True`` memory-for-wire endpoint.  The
+    local contractions keep their autotuned Pallas winners: every
+    candidate behind ``kops.local_conv2d`` carries a ``custom_vjp``
+    (backward via the same kernel family on transposed operands)."""
     sizes = dict(mesh.shape)
     fn = shard_map(
         functools.partial(_local_conv, sizes=sizes, stride=stride,
@@ -561,8 +563,7 @@ def conv2d_distributed(x, w, mesh: Mesh, *, schedule: str = "allgather",
     schedule = _conv_effective_schedule(schedule, grid)
     plans = _conv_plans(x.shape, w.shape, grid, stride, padding)
     if save_gathered:
-        return _conv2d_raw(x, w, mesh, schedule, tuple(stride), plans,
-                           pallas=False)
+        return _conv2d_raw(x, w, mesh, schedule, tuple(stride), plans)
     return _conv2d_vjp(x, w, mesh, schedule, tuple(stride), plans)
 
 

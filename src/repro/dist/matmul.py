@@ -280,8 +280,10 @@ def _local_matmul_bwd(xl, wl, gl, *, pm, pn, pc, schedule):
 
 def _matmul_raw(x, w, mesh, schedule, pallas=True):
     """The forward shard_map itself — differentiable natively for the
-    ``save_gathered=True`` memory-for-wire endpoint (which forces the XLA
-    local ops: the Pallas kernels are primal-only)."""
+    ``save_gathered=True`` memory-for-wire endpoint.  The local
+    contractions keep their autotuned Pallas winners: every candidate
+    behind ``kops.local_matmul`` carries a ``custom_vjp`` (backward via
+    the same kernel family on transposed operands)."""
     sizes = dict(mesh.shape)
     pm, pn, pc = sizes["m"], sizes["n"], sizes["c"]
     fn = shard_map(
@@ -341,7 +343,7 @@ def matmul_distributed(x, w, mesh: Mesh, *, schedule: str = "allgather",
     _check_matmul_shapes(M, C, N, (pm, pn, pc))
     schedule = _matmul_effective_schedule(schedule, (pm, pn, pc))
     if save_gathered:
-        return _matmul_raw(x, w, mesh, schedule, pallas=False)
+        return _matmul_raw(x, w, mesh, schedule)
     return _matmul_vjp(x, w, mesh, schedule)
 
 

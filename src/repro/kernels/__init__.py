@@ -1,3 +1,23 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Chip-level kernels: the candidate menu and the autotuned selector.
+
+The package is organised as *mechanism* modules (each one implementation
+family, policy-free) under a single *policy* module (`ops`):
+
+* ``matmul``    — two-level tiled Pallas matmul (paper Eq. 4 plan);
+* ``conv2d``    — direct tiled Pallas conv (stride 1, tiling feature dims);
+* ``winograd``  — F(2x2,3x3) transforms around a batched 16-frequency
+  tile GEMM (the 3x3 stride-1 fast path, 2.25x fewer multiplies);
+* ``gemm_conv`` — im2col patch-matrix GEMM (the universal candidate:
+  any stride, any extent);
+* ``tiling``    — the paper's analytic block planner;
+* ``autotune``  — best-of timing harness with a persistable plan cache
+  (``.repro_autotune.json``, ``REPRO_AUTOTUNE=0|1|refresh``);
+* ``ops``       — the only module the rest of the repo imports: plan
+  memoization, ``jax.custom_vjp`` wrappers, candidate menus, and the
+  autotuned ``local_conv2d`` / ``local_matmul`` dispatchers the
+  distributed schedules route every slab contraction through.
+
+Everything outside this package must reach the kernels through
+``kernels.ops`` (enforced by ``repro.analysis.astlint``) so the selector
+cannot be silently bypassed.
+"""

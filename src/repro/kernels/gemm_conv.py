@@ -1,0 +1,77 @@
+"""im2col-GEMM convolution — the CONV-as-matmul lowering (PyDTNN's
+``NN_gemm_conv`` lineage, rebuilt on this repo's tiled Pallas matmul).
+
+The stencil is flattened away up front: every output pixel's receptive
+field becomes one row of a ``[N*Ho*Wo, C*kh*kw]`` patch matrix, the kernel
+becomes a ``[C*kh*kw, K]`` matrix, and the conv is a single GEMM.  Unlike
+the direct Pallas conv (stride 1, feature dims that tile) this covers
+*every* shape — strides, tiny channel counts, prime extents — which makes
+it the autotuner's universal Pallas-family candidate and the menu's
+fallback-with-teeth: on shapes where the patch matrix tiles, the GEMM
+runs on ``matmul_pallas``; elsewhere it is one XLA dot, which still beats
+``lax.conv_general_dilated`` on many CPU/small-stencil shapes.
+
+The patch extraction is ``kh*kw`` strided slices (plain differentiable
+jnp ops), so the whole lowering differentiates natively; the GEMM itself
+is injected by the caller (``kernels.ops`` passes its autotuned
+``local_matmul``), keeping this module free of dispatch policy.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _pad_lo_hi(size: int, k: int, s: int, padding: str) -> Tuple[int, int, int]:
+    """(lo, hi, out) for one spatial dim under XLA's SAME/VALID rules."""
+    if padding == "SAME":
+        out = -(-size // s)
+        total = max((out - 1) * s + k - size, 0)
+        return total // 2, total - total // 2, out
+    if padding == "VALID":
+        return 0, 0, (size - k) // s + 1
+    raise ValueError(f"padding must be SAME or VALID, got {padding!r}")
+
+
+def im2col(x: jax.Array, kh: int, kw: int, *, stride=(1, 1),
+           padding: str = "SAME") -> Tuple[jax.Array, Tuple[int, int]]:
+    """Patch matrix of an NCHW input: ``[N*Ho*Wo, C*kh*kw]``, plus
+    ``(Ho, Wo)``.  Row ``n*Ho*Wo + i*Wo + j`` holds the (c, r, s)-ordered
+    receptive field of output pixel ``(n, i, j)`` — the ordering of
+    ``w.reshape(K, C*kh*kw)``."""
+    n, c, h, wd = x.shape
+    sh, sw = stride
+    lo_h, hi_h, ho = _pad_lo_hi(h, kh, sh, padding)
+    lo_w, hi_w, wo = _pad_lo_hi(wd, kw, sw, padding)
+    xp = jnp.pad(x, ((0, 0), (0, 0), (lo_h, hi_h), (lo_w, hi_w)))
+    cols = jnp.stack(
+        [xp[:, :, r:r + sh * (ho - 1) + 1:sh, s:s + sw * (wo - 1) + 1:sw]
+         for r in range(kh) for s in range(kw)], axis=2)   # [N,C,kh*kw,Ho,Wo]
+    lhs = cols.transpose(0, 3, 4, 1, 2).reshape(n * ho * wo, c * kh * kw)
+    return lhs, (ho, wo)
+
+
+def conv2d_im2col(x: jax.Array, w: jax.Array, *, stride=(1, 1),
+                  padding: str = "SAME",
+                  matmul: Optional[Callable] = None) -> jax.Array:
+    """NCHW x OIHW conv as one patch-matrix GEMM; any stride, SAME/VALID.
+
+    ``matmul(lhs, rhs)`` performs the ``[N*Ho*Wo, C*kh*kw] @ [C*kh*kw, K]``
+    product (``kernels.ops`` injects its autotuned ``local_matmul``); the
+    default is an XLA dot with f32 accumulation."""
+    n, c, h, wd = x.shape
+    k, c2, kh, kw = w.shape
+    if c != c2:
+        raise ValueError(f"channel mismatch: x {x.shape} vs w {w.shape}")
+    stride = tuple(stride)
+    lhs, (ho, wo) = im2col(x, kh, kw, stride=stride, padding=padding)
+    rhs = w.reshape(k, c * kh * kw).T
+    if matmul is None:
+        out = jnp.dot(lhs, rhs, preferred_element_type=jnp.float32)
+    else:
+        out = matmul(lhs, rhs)
+    out = out.reshape(n, ho, wo, k).transpose(0, 3, 1, 2)
+    return out.astype(jnp.result_type(x.dtype, w.dtype))

@@ -1,18 +1,51 @@
-"""jit'd public wrappers around the Pallas kernels, plus the local-contraction
-dispatchers the distributed hot path (`repro.dist`) routes through.
+"""Local-kernel engine: the candidate menu, the best-of selector, and the
+jit'd public wrappers the distributed hot path (`repro.dist`) routes
+through.
 
-Block shapes default to the paper-derived plan (`kernels.tiling`), memoized
-per shape tuple (`matmul_plan` / `conv_plan`) — the Eq. 4 solve is pure
-Python and would otherwise re-run at every trace site.  On CPU (this
-container) the kernels execute in interpret mode; on TPU they compile to
-Mosaic.  Shapes the kernels don't cover (strides, non-tiling extents) fall
-back to the XLA ops; ``REPRO_DIST_PALLAS=0`` forces the XLA path
-everywhere.
+Every per-step slab contraction of the distributed schedules lands on
+:func:`local_conv2d` / :func:`local_matmul`.  Instead of the former
+static two-way choice (Pallas-direct when the shape tiles, XLA
+otherwise), each dispatcher now consults a runtime autotuner
+(``kernels.autotune``, the PyDTNN ``best_of`` idiom): per unique
+``(op, shape, dtype, stride, padding)`` key it times every applicable
+candidate once, memoizes the winner, and persists the plan table to
+``.repro_autotune.json`` so later processes start hot.
+
+The conv candidate menu:
+
+* ``direct``   — ``kernels.conv2d.conv2d_pallas``, the paper's two-level
+  tiled direct conv (stride 1, feature dims that tile into >= 8 blocks);
+* ``winograd`` — ``kernels.winograd.conv2d_winograd``, F(2x2,3x3)
+  transforms around a batched 16-frequency tile GEMM (3x3 stride-1, the
+  CNN FLOPs hot spot; 2.25x fewer multiplies);
+* ``im2col``   — ``kernels.gemm_conv.conv2d_im2col``, the patch-matrix
+  GEMM (any stride, any extent — the universal candidate);
+* ``xla``      — ``lax.conv_general_dilated``.
+
+The matmul menu is ``pallas`` (tiled ``matmul_pallas`` with the memoized
+paper plan) vs ``xla``; Winograd's batched tile GEMM has its own
+``pallas``/``einsum`` menu.  Composite candidates recurse through the
+dispatchers — im2col's GEMM *is* ``local_matmul``, so its backend is
+autotuned too.
+
+Every Pallas kernel carries a ``jax.custom_vjp`` whose backward runs the
+same kernel family on transposed operands (dX of a matmul is a matmul,
+dIn/dKer of a stride-1 conv are convs), so every candidate — and hence
+every winner — differentiates natively; the dist ``save_gathered=True``
+paths no longer force the XLA fallback.
+
+Block shapes still come from the paper-derived plan (`kernels.tiling`),
+memoized per shape (`matmul_plan` / `conv_plan`).  On CPU (this
+container) the Pallas kernels execute in interpret mode; on TPU they
+compile to Mosaic.  ``REPRO_DIST_PALLAS=0`` removes the Pallas
+candidates everywhere; ``REPRO_AUTOTUNE=0`` disables the tuner and
+restores the static paper-plan dispatch (see ``kernels.autotune``).
 """
 
 from __future__ import annotations
 
 import functools
+import math
 import os
 
 import jax
@@ -20,9 +53,12 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core.problem import ConvProblem
-from repro.kernels import tiling
+from repro.kernels import autotune, tiling
 from repro.kernels.conv2d import conv2d_pallas
+from repro.kernels.gemm_conv import conv2d_im2col
 from repro.kernels.matmul import matmul_pallas
+from repro.kernels.winograd import (conv2d_winograd, winograd_applicable,
+                                    wino_gemm_einsum, wino_gemm_pallas)
 
 _DIST_PALLAS_ENV = "REPRO_DIST_PALLAS"
 _DIMNUMS = ("NCHW", "OIHW", "NCHW")
@@ -36,12 +72,21 @@ def _pallas_enabled() -> bool:
     return os.environ.get(_DIST_PALLAS_ENV, "1") != "0"
 
 
+@functools.lru_cache(maxsize=None)
 def math_gcd_block(extent: int, want: int) -> int:
-    """Largest divisor of ``extent`` not exceeding ``want``."""
-    d = min(want, extent)
-    while extent % d != 0:
-        d -= 1
-    return d
+    """Largest divisor of ``extent`` not exceeding ``want`` — by divisor
+    enumeration in O(sqrt(extent)) (the former descending scan was
+    O(extent) on large prime extents), memoized alongside the plans."""
+    want = min(want, extent)
+    best = 1
+    for d in range(1, math.isqrt(extent) + 1):
+        if extent % d == 0:
+            if d <= want:
+                best = max(best, d)
+            q = extent // d
+            if q <= want:
+                best = max(best, q)
+    return best
 
 
 # --------------------------------------------------------------------------
@@ -71,7 +116,93 @@ def conv_plan(n: int, c: int, k: int, h: int, w: int, kh: int, kw: int):
 
 
 # --------------------------------------------------------------------------
-# jit'd whole-op wrappers
+# custom_vjp wrappers: the Pallas kernels differentiate via the same
+# kernel family on transposed operands
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _matmul_pallas_vjp(x, w, blocks):
+    bm, bn, bk = blocks
+    return matmul_pallas(x, w, block_m=bm, block_n=bn, block_k=bk,
+                         interpret=_on_cpu())
+
+
+def _matmul_pallas_fwd(x, w, blocks):
+    return _matmul_pallas_vjp(x, w, blocks), (x, w)
+
+
+def _matmul_pallas_bwd(blocks, res, g):
+    x, w = res
+    # dX = g @ W^T and dW = X^T @ g are matmuls: re-dispatch (the
+    # transposed shapes get their own plan / winner)
+    dx = local_matmul(g, w.T)
+    dw = local_matmul(x.T, g)
+    return dx.astype(x.dtype), dw.astype(w.dtype)
+
+
+_matmul_pallas_vjp.defvjp(_matmul_pallas_fwd, _matmul_pallas_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def _conv_pallas_vjp(x, w, blocks, padding):
+    bb, bk, bc = blocks
+    return conv2d_pallas(x, w, block_b=bb, block_k=bk, block_c=bc,
+                         padding=padding, interpret=_on_cpu())
+
+
+def _conv_pallas_fwd(x, w, blocks, padding):
+    return _conv_pallas_vjp(x, w, blocks, padding), (x, w)
+
+
+def _conv_pallas_bwd(blocks, padding, res, g):
+    """Stride-1 conv transposes inside the family: dIn is the VALID conv
+    of the edge-padded cotangent against the flipped/O-I-swapped kernel,
+    dKer the N/C-transposed VALID correlation — both re-dispatched."""
+    x, w = res
+    kh, kw = w.shape[2], w.shape[3]
+    if padding == "SAME":
+        lo_h, lo_w = (kh - 1) // 2, (kw - 1) // 2
+        hi_h, hi_w = kh - 1 - lo_h, kw - 1 - lo_w
+        xp = jnp.pad(x, ((0, 0), (0, 0), (lo_h, hi_h), (lo_w, hi_w)))
+    else:
+        lo_h = lo_w = 0
+        xp = x
+    gp = jnp.pad(g, ((0, 0), (0, 0), (kh - 1, kh - 1), (kw - 1, kw - 1)))
+    wt = lax.rev(w, (2, 3)).transpose(1, 0, 2, 3)
+    dxp = local_conv2d(gp, wt, stride=(1, 1), padding="VALID")
+    dx = dxp[:, :, lo_h:lo_h + x.shape[2], lo_w:lo_w + x.shape[3]] \
+        if padding == "SAME" else dxp
+    dw = local_conv2d(xp.transpose(1, 0, 2, 3), g.transpose(1, 0, 2, 3),
+                      stride=(1, 1), padding="VALID").transpose(1, 0, 2, 3)
+    return dx.astype(x.dtype), dw.astype(w.dtype)
+
+
+_conv_pallas_vjp.defvjp(_conv_pallas_fwd, _conv_pallas_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _wino_gemm_pallas_vjp(v, u, blocks):
+    bp, bk, bc = blocks
+    return wino_gemm_pallas(v, u, block_p=bp, block_k=bk, block_c=bc,
+                            interpret=_on_cpu())
+
+
+def _wino_gemm_pallas_fwd(v, u, blocks):
+    return _wino_gemm_pallas_vjp(v, u, blocks), (v, u)
+
+
+def _wino_gemm_pallas_bwd(blocks, res, g):
+    v, u = res
+    dv = wino_gemm(g, u.transpose(0, 2, 1))
+    du = wino_gemm(v.transpose(0, 2, 1), g)
+    return dv.astype(v.dtype), du.astype(u.dtype)
+
+
+_wino_gemm_pallas_vjp.defvjp(_wino_gemm_pallas_fwd, _wino_gemm_pallas_bwd)
+
+
+# --------------------------------------------------------------------------
+# jit'd whole-op wrappers (the static paper-plan path; bench baseline)
 # --------------------------------------------------------------------------
 
 @functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k"))
@@ -83,8 +214,7 @@ def matmul(x: jax.Array, w: jax.Array, *, block_m: int = 0, block_n: int = 0,
     _, n = w.shape
     if not (block_m and block_n and block_k):
         block_m, block_n, block_k = matmul_plan(m, n, k)
-    return matmul_pallas(x, w, block_m=block_m, block_n=block_n,
-                         block_k=block_k, interpret=_on_cpu())
+    return _matmul_pallas_vjp(x, w, (block_m, block_n, block_k))
 
 
 @functools.partial(jax.jit, static_argnames=("block_b", "block_k", "block_c",
@@ -92,7 +222,8 @@ def matmul(x: jax.Array, w: jax.Array, *, block_m: int = 0, block_n: int = 0,
 def conv2d_same(x: jax.Array, w: jax.Array, *, block_b: int = 0,
                 block_k: int = 0, block_c: int = 0,
                 use_pallas: bool = True) -> jax.Array:
-    """stride-1 SAME conv, NCHW/OIHW."""
+    """stride-1 SAME conv, NCHW/OIHW, on the static paper plan
+    (``use_pallas=False`` is the XLA reference/baseline path)."""
     if not use_pallas:
         return lax.conv_general_dilated(
             x, w, (1, 1), "SAME", dimension_numbers=_DIMNUMS,
@@ -101,14 +232,11 @@ def conv2d_same(x: jax.Array, w: jax.Array, *, block_b: int = 0,
     k, _, kh, kw = w.shape
     if not (block_b and block_k and block_c):
         block_b, block_k, block_c = conv_plan(n, c, k, h, wd, kh, kw)
-    return conv2d_pallas(x, w, block_b=block_b, block_k=block_k,
-                         block_c=block_c, interpret=_on_cpu())
+    return _conv_pallas_vjp(x, w, (block_b, block_k, block_c), "SAME")
 
 
 # --------------------------------------------------------------------------
-# Local-contraction dispatchers: the repro.dist hot path calls these for
-# every per-step slab contraction, so the distributed schedules run on the
-# same two-level-tiled kernels the chip-level story is about.
+# Applicability predicates
 # --------------------------------------------------------------------------
 
 def pallas_applicable_matmul(m: int, n: int, k: int) -> bool:
@@ -127,41 +255,173 @@ def pallas_applicable_conv(x_shape, w_shape, stride, padding) -> bool:
             and kh <= h and kw <= wd)
 
 
-def local_matmul(x: jax.Array, w: jax.Array, *,
-                 prefer_pallas: bool = True) -> jax.Array:
-    """``[m,k] @ [k,n]`` for a distributed inner step: the Pallas kernel
-    with the memoized paper plan when the shape tiles, else the XLA dot
-    (f32 accumulation either way).  The Pallas kernels are primal-only
-    (no JVP rule), so callers that differentiate through the call
-    natively — e.g. the ``save_gathered`` VJP variant — pass
-    ``prefer_pallas=False``."""
-    m, k = x.shape
-    _, n = w.shape
-    if prefer_pallas and _pallas_enabled() \
-            and pallas_applicable_matmul(m, n, k):
-        bm, bn, bk = matmul_plan(m, n, k)
-        return matmul_pallas(x, w, block_m=bm, block_n=bn, block_k=bk,
-                             interpret=_on_cpu())
+def wino_gemm_applicable(p: int, k: int, c: int) -> bool:
+    """The Pallas batched tile GEMM tiles like the matmul kernel."""
+    return pallas_applicable_matmul(p, k, c)
+
+
+# --------------------------------------------------------------------------
+# Autotune keys and candidate menus
+# --------------------------------------------------------------------------
+
+def _dt(dtype) -> str:
+    return jnp.dtype(dtype).name
+
+
+def conv_key(x_shape, w_shape, dtype, stride, padding) -> str:
+    n, c, h, wd = x_shape
+    k, _, kh, kw = w_shape
+    return (f"conv2d:{n}x{c}x{h}x{wd}:k{k}:{kh}x{kw}"
+            f":s{stride[0]}x{stride[1]}:{padding}:{_dt(dtype)}")
+
+
+def matmul_key(m: int, n: int, k: int, dtype) -> str:
+    return f"matmul:{m}x{k}x{n}:{_dt(dtype)}"
+
+
+def wino_gemm_key(p: int, k: int, c: int, dtype) -> str:
+    return f"wino_gemm:16x{p}x{c}:k{k}:{_dt(dtype)}"
+
+
+def _rand(shape, dtype):
+    return jax.random.normal(jax.random.PRNGKey(0), shape, dtype)
+
+
+def _run_matmul_impl(impl: str, x, w):
+    if impl == "pallas":
+        return _matmul_pallas_vjp(x, w, matmul_plan(x.shape[0], w.shape[1],
+                                                    x.shape[1]))
     return jnp.dot(x, w, preferred_element_type=jnp.float32).astype(
         jnp.result_type(x.dtype, w.dtype))
+
+
+def select_matmul_impl(m: int, n: int, k: int, dtype, *,
+                       allow_pallas: bool = True) -> str:
+    """Winning matmul impl (``pallas`` | ``xla``) for the shape — the
+    static paper plan (Pallas when the shape tiles) when the autotuner is
+    off, the timed best-of otherwise."""
+    pallas_ok = (allow_pallas and _pallas_enabled()
+                 and pallas_applicable_matmul(m, n, k))
+    if not pallas_ok:
+        return "xla"
+    if not autotune.enabled():
+        return "pallas"
+    cands = [("pallas", functools.partial(_run_matmul_impl, "pallas")),
+             ("xla", functools.partial(_run_matmul_impl, "xla"))]
+    return autotune.best_of(
+        matmul_key(m, n, k, dtype), cands,
+        lambda: (_rand((m, k), dtype), _rand((k, n), dtype)))
+
+
+def _run_wino_gemm_impl(impl: str, v, u):
+    if impl == "pallas":
+        t, p, c = v.shape
+        k = u.shape[2]
+        return _wino_gemm_pallas_vjp(v, u, matmul_plan(p, k, c))
+    return wino_gemm_einsum(v, u)
+
+
+def wino_gemm(v: jax.Array, u: jax.Array) -> jax.Array:
+    """Autotuned ``[16,P,C] @ [16,C,K]`` batched tile GEMM (the Winograd
+    hot spot): Pallas when the shape tiles and wins, XLA einsum
+    otherwise."""
+    t, p, c = v.shape
+    k = u.shape[2]
+    pallas_ok = _pallas_enabled() and wino_gemm_applicable(p, k, c)
+    if not pallas_ok:
+        impl = "einsum"
+    elif not autotune.enabled():
+        impl = "pallas"
+    else:
+        cands = [("pallas", functools.partial(_run_wino_gemm_impl, "pallas")),
+                 ("einsum", functools.partial(_run_wino_gemm_impl, "einsum"))]
+        impl = autotune.best_of(
+            wino_gemm_key(p, k, c, v.dtype), cands,
+            lambda: (_rand(v.shape, v.dtype), _rand(u.shape, u.dtype)))
+    return _run_wino_gemm_impl(impl, v, u)
+
+
+def _run_conv_impl(impl: str, x, w, stride, padding):
+    if impl == "direct":
+        n, c, h, wd = x.shape
+        k, _, kh, kw = w.shape
+        return _conv_pallas_vjp(x, w, conv_plan(n, c, k, h, wd, kh, kw),
+                                padding)
+    if impl == "winograd":
+        return conv2d_winograd(x, w, padding=padding, gemm=wino_gemm)
+    if impl == "im2col":
+        return conv2d_im2col(x, w, stride=stride, padding=padding,
+                             matmul=local_matmul)
+    return lax.conv_general_dilated(
+        x, w, stride, padding, dimension_numbers=_DIMNUMS,
+        preferred_element_type=jnp.float32).astype(
+            jnp.result_type(x.dtype, w.dtype))
+
+
+def conv_candidates(x_shape, w_shape, stride, padding, *,
+                    allow_pallas: bool = True) -> list:
+    """Ordered applicable-candidate names for the conv shape (the static
+    paper-plan choice first)."""
+    direct_ok = (allow_pallas and _pallas_enabled()
+                 and pallas_applicable_conv(x_shape, w_shape, stride,
+                                            padding))
+    cands = ["direct"] if direct_ok else []
+    if winograd_applicable(x_shape, w_shape, stride, padding):
+        cands.append("winograd")
+    cands.append("im2col")
+    cands.append("xla")
+    if not direct_ok:  # static choice (xla) leads when direct is out
+        cands.remove("xla")
+        cands.insert(0, "xla")
+    return cands
+
+
+def select_conv_impl(x_shape, w_shape, dtype, stride, padding, *,
+                     allow_pallas: bool = True) -> str:
+    """Winning conv impl (``direct`` | ``winograd`` | ``im2col`` |
+    ``xla``) for the shape — the static paper plan when the autotuner is
+    off, the timed best-of otherwise."""
+    stride = tuple(stride)
+    cands = conv_candidates(x_shape, w_shape, stride, padding,
+                            allow_pallas=allow_pallas)
+    if not autotune.enabled():
+        return cands[0]  # static paper plan: direct when it tiles, else xla
+    menu = [(name, functools.partial(_run_conv_impl, name, stride=stride,
+                                     padding=padding))
+            for name in cands]
+    return autotune.best_of(
+        conv_key(x_shape, w_shape, dtype, stride, padding), menu,
+        lambda: (_rand(x_shape, dtype), _rand(w_shape, dtype)))
+
+
+# --------------------------------------------------------------------------
+# Local-contraction dispatchers: the repro.dist hot path calls these for
+# every per-step slab contraction, so every distributed schedule (and
+# make_grid_train_step) inherits the autotuned winners.
+# --------------------------------------------------------------------------
+
+def local_matmul(x: jax.Array, w: jax.Array, *,
+                 prefer_pallas: bool = True) -> jax.Array:
+    """``[m,k] @ [k,n]`` for a distributed inner step, dispatched through
+    the autotuned selector (f32 accumulation on every path).  All
+    candidates differentiate natively — the Pallas kernel carries a
+    custom VJP running the same family on transposed operands.
+    ``prefer_pallas=False`` removes the Pallas candidate."""
+    m, k = x.shape
+    _, n = w.shape
+    impl = select_matmul_impl(m, n, k, x.dtype, allow_pallas=prefer_pallas)
+    return _run_matmul_impl(impl, x, w)
 
 
 def local_conv2d(x: jax.Array, w: jax.Array, *, stride=(1, 1),
                  padding: str = "VALID",
                  prefer_pallas: bool = True) -> jax.Array:
-    """NCHW/OIHW conv for a distributed inner step: the Pallas direct-conv
-    kernel when it covers the shape (stride 1, tiling feature dims), else
-    ``lax.conv_general_dilated``.  ``prefer_pallas=False`` forces the XLA
-    path (the Pallas kernels are primal-only — no JVP rule)."""
+    """NCHW/OIHW conv for a distributed inner step, dispatched through
+    the autotuned selector over the full candidate menu (direct Pallas /
+    Winograd / im2col-GEMM / XLA).  Every candidate differentiates
+    natively.  ``prefer_pallas=False`` removes the direct-Pallas
+    candidate."""
     stride = tuple(stride)
-    if (prefer_pallas and _pallas_enabled()
-            and pallas_applicable_conv(x.shape, w.shape, stride, padding)):
-        n, c, h, wd = x.shape
-        k, _, kh, kw = w.shape
-        bb, bk, bc = conv_plan(n, c, k, h, wd, kh, kw)
-        return conv2d_pallas(x, w, block_b=bb, block_k=bk, block_c=bc,
-                             padding=padding, interpret=_on_cpu())
-    return lax.conv_general_dilated(
-        x, w, stride, padding, dimension_numbers=_DIMNUMS,
-        preferred_element_type=jnp.float32).astype(
-            jnp.result_type(x.dtype, w.dtype))
+    impl = select_conv_impl(x.shape, w.shape, x.dtype, stride, padding,
+                            allow_pallas=prefer_pallas)
+    return _run_conv_impl(impl, x, w, stride, padding)

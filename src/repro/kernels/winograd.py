@@ -1,0 +1,139 @@
+"""Winograd F(2x2, 3x3) convolution — input/kernel/output transforms
+around a batched 16-frequency tile GEMM (Lavin & Gray 2015; PyDTNN's
+``conv_winograd`` lineage).
+
+Each 2x2 output tile is computed from a 4x4 input tile in the transform
+domain: ``Y = A^T [ (G g G^T) . (B^T d B) ] A``.  Collecting every tile
+of every image turns the elementwise products into 16 independent
+``[P, C] @ [C, K]`` GEMMs (P = N * ceil(Ho/2) * ceil(Wo/2)) — 2.25x
+fewer multiplies than the direct 3x3 conv, which is why this is the
+canonical fast path for the 3x3 stride-1 convs that dominate CNN FLOPs.
+
+The transforms are cheap dense 4x3/4x4 contractions left as jnp einsums
+(differentiable, fused by XLA); the FLOPs hot spot — the batched tile
+GEMM — runs on :func:`wino_gemm_pallas`, a Pallas TPU kernel with the
+same "Out block stays VMEM-resident across the sequential c slabs"
+schedule as ``kernels.matmul`` (grid ``(16, P/bp, K/bk, C/bc)``).  The
+GEMM callable is injected by ``kernels.ops`` so its backend (Pallas vs
+XLA einsum) is itself autotuned per shape.
+
+Odd output extents are handled by padding the tile grid and cropping the
+result, so applicability is simply: 3x3 kernel, stride 1, SAME/VALID.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# F(2x2, 3x3) transform matrices (Lavin & Gray 2015, Sec. 4).
+_BT = ((1, 0, -1, 0), (0, 1, 1, 0), (0, -1, 1, 0), (0, 1, 0, -1))
+_G = ((1, 0, 0), (.5, .5, .5), (.5, -.5, .5), (0, 0, 1))
+_AT = ((1, 1, 1, 0), (0, 1, -1, -1))
+
+
+def winograd_applicable(x_shape, w_shape, stride, padding) -> bool:
+    """F(2x2,3x3) covers 3x3 stride-1 SAME/VALID convs (any extent — odd
+    outputs pad the tile grid and crop)."""
+    n, c, h, wd = x_shape
+    k, c2, kh, kw = w_shape
+    return (c == c2 and kh == 3 and kw == 3 and tuple(stride) == (1, 1)
+            and padding in ("SAME", "VALID") and h >= kh and wd >= kw)
+
+
+# --------------------------------------------------------------------------
+# The batched 16-frequency tile GEMM, Pallas and einsum backends
+# --------------------------------------------------------------------------
+
+def _wino_gemm_kernel(v_ref, u_ref, o_ref, acc_ref, *, n_c: int):
+    @pl.when(pl.program_id(3) == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(v_ref[0], u_ref[0],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(3) == n_c - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def wino_gemm_pallas(v: jax.Array, u: jax.Array, *, block_p: int = 128,
+                     block_k: int = 128, block_c: int = 256,
+                     interpret: bool = False) -> jax.Array:
+    """``[16, P, C] @ [16, C, K] -> [16, P, K]`` (v.dtype), f32 accumulation.
+
+    One grid step per (frequency, P block, K block, C slab); the output
+    block accumulates in a VMEM f32 scratch across the sequential C slabs."""
+    t, p, c = v.shape
+    t2, c2, k = u.shape
+    assert t == t2 == 16 and c == c2, (v.shape, u.shape)
+    bp, bk, bc = min(block_p, p), min(block_k, k), min(block_c, c)
+    assert p % bp == 0 and k % bk == 0 and c % bc == 0, (p, k, c, bp, bk, bc)
+    n_c = c // bc
+    return pl.pallas_call(
+        functools.partial(_wino_gemm_kernel, n_c=n_c),
+        grid=(t, p // bp, k // bk, n_c),
+        in_specs=[
+            pl.BlockSpec((1, bp, bc), lambda f, i, j, q: (f, i, q)),
+            pl.BlockSpec((1, bc, bk), lambda f, i, j, q: (f, q, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bp, bk), lambda f, i, j, q: (f, i, j)),
+        out_shape=jax.ShapeDtypeStruct((t, p, k), v.dtype),
+        scratch_shapes=[pltpu.VMEM((1, bp, bk), jnp.float32)],
+        interpret=interpret,
+    )(v, u)
+
+
+def wino_gemm_einsum(v: jax.Array, u: jax.Array) -> jax.Array:
+    """XLA backend of the batched tile GEMM (f32 accumulation)."""
+    return jnp.einsum("tpc,tck->tpk", v, u,
+                      preferred_element_type=jnp.float32).astype(v.dtype)
+
+
+# --------------------------------------------------------------------------
+# The conv itself: transform -> batched GEMM -> inverse transform
+# --------------------------------------------------------------------------
+
+def conv2d_winograd(x: jax.Array, w: jax.Array, *, padding: str = "SAME",
+                    gemm: Optional[Callable] = None) -> jax.Array:
+    """3x3 stride-1 conv, NCHW x OIHW, via F(2x2,3x3).
+
+    ``gemm(v, u)`` runs the ``[16, P, C] @ [16, C, K]`` batched tile GEMM
+    (``kernels.ops`` injects its autotuned dispatcher); the default is the
+    XLA einsum backend."""
+    n, c, h, wd = x.shape
+    k, c2, kh, kw = w.shape
+    if not winograd_applicable(x.shape, w.shape, (1, 1), padding):
+        raise ValueError(f"winograd F(2x2,3x3) does not cover "
+                         f"{x.shape} * {w.shape} pad={padding!r}")
+    lo = 1 if padding == "SAME" else 0
+    ho, wo = h + 2 * lo - 2, wd + 2 * lo - 2
+    th, tw = -(-ho // 2), -(-wo // 2)    # tile grid (pad odd, crop below)
+    # pad so the tile grid reads exactly 2*t + 2 rows/cols
+    xp = jnp.pad(x, ((0, 0), (0, 0), (lo, 2 * th + 2 - h - lo),
+                     (lo, 2 * tw + 2 - wd - lo)))
+    f32 = jnp.float32
+    bt = jnp.array(_BT, f32)
+    g = jnp.array(_G, f32)
+    at = jnp.array(_AT, f32)
+    # 4x4 input tiles at stride 2: d[n,c,ti,tj,i,j] = xp[n,c,2ti+i,2tj+j]
+    d = jnp.stack(
+        [jnp.stack([xp[:, :, a:a + 2 * th:2, b:b + 2 * tw:2]
+                    for b in range(4)], axis=-1)
+         for a in range(4)], axis=-2)                    # [N,C,th,tw,4,4]
+    v = jnp.einsum("ai,bj,nctwij->abnctw", bt, bt, d.astype(f32))
+    u = jnp.einsum("ai,bj,kcij->abck", g, g, w.astype(f32))
+    v2 = (v.reshape(16, n, c, th, tw).transpose(0, 1, 3, 4, 2)
+           .reshape(16, n * th * tw, c))
+    u2 = u.reshape(16, c, k)
+    m = wino_gemm_einsum(v2, u2) if gemm is None else gemm(v2, u2)
+    m2 = m.astype(f32).reshape(4, 4, n, th, tw, k)
+    y = jnp.einsum("pa,qb,abntwk->ntwkpq", at, at, m2)   # [N,th,tw,K,2,2]
+    y = y.transpose(0, 3, 1, 4, 2, 5).reshape(n, k, 2 * th, 2 * tw)
+    return y[:, :, :ho, :wo].astype(jnp.result_type(x.dtype, w.dtype))

@@ -31,6 +31,7 @@ def run_in_subprocess(body: str, devices: int = 8):
         os.environ["XLA_FLAGS"] = \\
             "--xla_force_host_platform_device_count={devices}"
         os.environ["REPRO_DIST_PALLAS"] = "0"
+        os.environ["REPRO_AUTOTUNE"] = "0"
         import jax, jax.numpy as jnp
         import numpy as np
     """) + textwrap.dedent(body)

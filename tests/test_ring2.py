@@ -341,11 +341,13 @@ def test_ring2_wire_leq_ring_and_peak_below_8dev():
     """Acceptance: measured HLO wire of ring2 <= the one-ring schedule,
     and measured per-rank live bytes strictly below it, on the 8-device
     2.5D grids; the analytic peak accounting bounds/tracks the traced
-    live bytes.  Kernel dispatch is pinned to the XLA ops: interpret-mode
-    Pallas emulation buffers would otherwise swamp the schedule's own
+    live bytes.  Kernel dispatch is pinned to the XLA ops (no Pallas, no
+    autotuner): interpret-mode Pallas emulation buffers or an im2col
+    winner's patch matrix would otherwise swamp the schedule's own
     footprint on CPU."""
     run_in_subprocess("""
         os.environ["REPRO_DIST_PALLAS"] = "0"
+        os.environ["REPRO_AUTOTUNE"] = "0"
         from repro.dist.conv2d import (conv2d_distributed, conv_mem_elems,
                                        conv_train_mem_elems, make_conv_mesh)
         from repro.dist.matmul import (matmul_distributed, matmul_mem_elems,
