@@ -2,7 +2,7 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test fast-test dist-test grad-test static-test verify-dist lint \
-	demo autotune bench bench-full
+	doclint demo serve-smoke autotune bench bench-full
 
 test:  ## tier-1 verify (full suite, fail-fast)
 	$(PY) -m pytest -x -q
@@ -30,8 +30,14 @@ lint:  ## ruff if available, else the raw-collective AST lint only
 	fi
 	$(PY) -m repro.analysis.astlint
 
+doclint:  ## README/docs references (make targets, env vars, paths) exist
+	$(PY) -m repro.analysis.doclint
+
 demo:  ## end-to-end distributed conv demo on 8 virtual devices
 	$(PY) examples/distributed_conv_demo.py
+
+serve-smoke:  ## LM serving on the dist grid vs dense, greedy-token check
+	$(PY) examples/serve_lm.py --smoke
 
 autotune:  ## warm the local-kernel plan cache (.repro_autotune.json)
 	$(PY) -m repro.kernels.autotune

@@ -1,9 +1,11 @@
 """Benchmark harness — one module per paper table/claim.
 
 Prints ``name,us_per_call,derived`` CSV rows and persists the perf
-trajectory to ``BENCH_comm.json`` + ``BENCH_kernels.json`` at the repo
-root (schema per record: ``{name, grid, schedule, wire_bytes, peak_elems,
-wall_ms}`` plus module-specific extras).  The JSON files are checked in
+trajectory to ``BENCH_comm.json`` + ``BENCH_kernels.json`` +
+``BENCH_serve.json`` at the repo root (schema per record: ``{name, grid,
+schedule, wire_bytes, peak_elems, wall_ms}`` plus module-specific extras
+— the serve records add ``{arch, tokens_per_s, p50_ms, p99_ms,
+wire_bytes_per_tok}``).  The JSON files are checked in
 as the regression baseline: future PRs diff their wire/peak fields (exact
 analytic/HLO quantities; ``wall_ms``/``measured_live_bytes`` are
 machine-dependent and informational).
@@ -45,7 +47,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (bench_comm_volume, bench_cost_model,
-                            bench_kernels, bench_sharding)
+                            bench_kernels, bench_serve, bench_sharding)
     # comm/kernels print their rows from the JSON records below — no
     # second (CSV-only) benchmarking pass
     mods = [("cost_model", bench_cost_model)]
@@ -64,7 +66,8 @@ def main() -> None:
             traceback.print_exc()
 
     for fname, fn in [("BENCH_comm.json", bench_comm_volume.run_json),
-                      ("BENCH_kernels.json", bench_kernels.run_json)]:
+                      ("BENCH_kernels.json", bench_kernels.run_json),
+                      ("BENCH_serve.json", bench_serve.run_json)]:
         try:
             recs = fn(quick=args.quick)
             path = os.path.join(args.out_dir, fname)

@@ -241,6 +241,68 @@ def synthesize_dist_grid(x_shape, w_shape, n_devices: int, *,
     return best
 
 
+@dataclasses.dataclass(frozen=True)
+class ServeGridChoice:
+    """A ``(Pm, Pn, Pc)`` serving grid for the LM decode path."""
+
+    grid: Tuple[int, int, int]
+    algo: str                   # 2D-SUMMA / 2.5D / 3D analogue
+    routed: int                 # projections that run on the grid
+    comm_elems: Dict            # lm_serve_comm_elems accounting
+    mem_elems: Dict             # lm_serve_mem_elems accounting
+
+
+def synthesize_serve_grid(cfg, n_devices: int, *, slots: int, max_seq: int,
+                          schedule: str = "allgather",
+                          mem_cap_elems: Optional[float] = None
+                          ) -> ServeGridChoice:
+    """Choose the ``(Pm, Pn, Pc)`` grid for the LM serving engine.
+
+    Enumerates every 3-factorization of ``n_devices``, keeps those where
+    at least one decode projection satisfies the runtime divisibility
+    constraints, and picks by: most projections routed through the grid,
+    then least per-token decode wire (``lm_serve_comm_elems``), then
+    least peak live memory.  ``mem_cap_elems`` discards grids whose
+    per-device peak (weights + grid-sharded KV cache + transients,
+    ``lm_serve_mem_elems``) exceeds the cap — the 2.5D memory/wire
+    tradeoff deciding the serving grid under the KV-cache budget.
+    """
+    from repro.dist.lm import (lm_decode_matmuls, lm_serve_comm_elems,
+                               lm_serve_mem_elems, projection_routed)
+
+    best: Optional[ServeGridChoice] = None
+    best_key = None
+    capped_out = 0
+    for grid in _factorizations(n_devices, 3):
+        routed = sum(projection_routed(M, C, N, grid)
+                     for _, M, C, N in lm_decode_matmuls(cfg, slots))
+        if routed == 0 and n_devices > 1:
+            continue
+        comm = lm_serve_comm_elems(cfg, grid, slots=slots,
+                                   schedule=schedule)
+        mem = lm_serve_mem_elems(cfg, grid, slots=slots, max_seq=max_seq,
+                                 schedule=schedule)
+        if mem_cap_elems is not None and mem["peak"] > mem_cap_elems:
+            capped_out += 1
+            continue
+        key = (-routed, comm["total"], mem["peak"], grid)
+        if best_key is None or key < best_key:
+            best_key = key
+            pm, pn, pc = grid
+            best = ServeGridChoice(
+                grid=grid, algo=_algo_family((pm, 1, 1, pn, pc)),
+                routed=routed, comm_elems=comm, mem_elems=mem)
+    if best is None:
+        detail = (f" under mem cap {mem_cap_elems:.3e} elems "
+                  f"({capped_out} grids over cap)"
+                  if mem_cap_elems is not None and capped_out else "")
+        raise ValueError(
+            f"no (Pm,Pn,Pc) factorization of {n_devices} devices routes "
+            f"a decode projection of {cfg.arch_id} at {slots} slots"
+            + detail)
+    return best
+
+
 def synthesize_model(layers: Dict[str, ConvProblem], mesh_axes: Dict[str, int],
                      M: float, *, batch_axes: Sequence[str] = ("pod", "data"),
                      ml_correction: bool = True) -> Dict[str, LayerSharding]:

@@ -30,7 +30,7 @@ class ModelFns:
 _TRANSFORMER = ModelFns(
     init=lm.init_lm, loss=lm.loss_lm, forward=lm.forward_lm,
     init_cache=lambda cfg, batch, max_seq, **kw: lm.init_cache(
-        cfg, batch, max_seq),
+        cfg, batch, max_seq, per_slot=kw.get("per_slot", False)),
     prefill=lm.prefill, decode_step=lm.decode_step)
 
 _SSM = ModelFns(

@@ -476,14 +476,17 @@ def attention(params: Dict, x: jax.Array, *, n_heads: int, n_kv_heads: int,
               head_dim: int, positions: jax.Array, theta: float,
               causal: bool = True, window: int = 0,
               mrope_sections: Optional[Tuple[int, int, int]] = None,
-              kv_override: Optional[Tuple[jax.Array, jax.Array]] = None
-              ) -> jax.Array:
-    """Full (training / prefill) attention.  x: [B, S, d]."""
+              kv_override: Optional[Tuple[jax.Array, jax.Array]] = None,
+              mm=None) -> jax.Array:
+    """Full (training / prefill) attention.  x: [B, S, d].  ``mm``
+    overrides the projection matmul (``repro.dist.lm.dist_projection``
+    routes it onto the explicit ``(Pm, Pn, Pc)`` grid)."""
+    mm = mm if mm is not None else _dense_mm
     b, s, _ = x.shape
-    q = (x @ params["wq"]).reshape(b, s, n_heads, head_dim)
+    q = mm(x, params["wq"]).reshape(b, s, n_heads, head_dim)
     if kv_override is None:
-        k = (x @ params["wk"]).reshape(b, s, n_kv_heads, head_dim)
-        v = (x @ params["wv"]).reshape(b, s, n_kv_heads, head_dim)
+        k = mm(x, params["wk"]).reshape(b, s, n_kv_heads, head_dim)
+        v = mm(x, params["wv"]).reshape(b, s, n_kv_heads, head_dim)
         if mrope_sections is not None:
             q = apply_mrope(q, positions, theta, mrope_sections)
             k = apply_mrope(k, positions, theta, mrope_sections)
@@ -500,10 +503,15 @@ def attention(params: Dict, x: jax.Array, *, n_heads: int, n_kv_heads: int,
             q = apply_rope(q, pos2d, theta)
     out = attention_core(q, k, v, causal=causal, window=window,
                          scale=head_dim ** -0.5)
-    return out.reshape(b, s, n_heads * head_dim) @ params["wo"]
+    return mm(out.reshape(b, s, n_heads * head_dim), params["wo"])
 
 
 # ------------------------------------------------------------------ MLPs --
+
+
+def _dense_mm(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Default projection matmul (the GSPMD / single-device path)."""
+    return x @ w
 
 def init_mlp(key, d_model: int, d_ff: int, act: str,
              dtype=jnp.bfloat16) -> Dict:
@@ -515,15 +523,16 @@ def init_mlp(key, d_model: int, d_ff: int, act: str,
     return p
 
 
-def mlp(params: Dict, x: jax.Array, act: str) -> jax.Array:
-    up = x @ params["w_up"]
+def mlp(params: Dict, x: jax.Array, act: str, mm=None) -> jax.Array:
+    mm = mm if mm is not None else _dense_mm
+    up = mm(x, params["w_up"])
     if act == "swiglu":
-        h = jax.nn.silu(x @ params["w_gate"]) * up
+        h = jax.nn.silu(mm(x, params["w_gate"])) * up
     elif act == "geglu":
-        h = jax.nn.gelu(x @ params["w_gate"]) * up
+        h = jax.nn.gelu(mm(x, params["w_gate"])) * up
     else:
         h = jax.nn.gelu(up)
-    return h @ params["w_down"]
+    return mm(h, params["w_down"])
 
 
 # ------------------------------------------------------------- embedding --

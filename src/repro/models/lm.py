@@ -63,15 +63,30 @@ def layer_windows(cfg: ModelConfig) -> jax.Array:
 
 # --------------------------------------------------------------- forward --
 
+def _make_mm(dist_mesh, dist_schedule: str):
+    """Projection routing: ``x @ w`` -> `repro.dist.lm.dist_projection`
+    on the `(Pm,Pn,Pc)` serving mesh.  Returns None when no mesh is
+    given so callers fall back to the dense matmul."""
+    if dist_mesh is None:
+        return None
+    from repro.dist import lm as dist_lm
+
+    def mm(x, w):
+        return dist_lm.dist_projection(x, w, dist_mesh,
+                                       schedule=dist_schedule)
+    return mm
+
+
 def _block_apply(blk: Dict, h: jax.Array, *, cfg: ModelConfig,
-                 positions: jax.Array, window: jax.Array,
+                 positions: jax.Array, window: jax.Array, mm=None,
+                 dist_mesh=None, dist_schedule: str = "allgather",
                  ) -> Tuple[jax.Array, jax.Array]:
     mrope = cfg.mrope_sections if cfg.mrope_sections[0] else None
     a = L.attention(blk["attn"], L.rmsnorm(h, blk["ln1"], cfg.norm_eps),
                     n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
                     head_dim=cfg.head_dim, positions=positions,
                     theta=cfg.rope_theta, causal=True, window=window,
-                    mrope_sections=mrope)
+                    mrope_sections=mrope, mm=mm)
     h = h + a
     aux = jnp.float32(0.0)
     if cfg.is_moe:
@@ -79,17 +94,26 @@ def _block_apply(blk: Dict, h: jax.Array, *, cfg: ModelConfig,
                                    L.rmsnorm(h, blk["ln2"], cfg.norm_eps),
                                    top_k=cfg.top_k,
                                    capacity_factor=cfg.capacity_factor,
-                                   group_size=cfg.moe_group_size)
+                                   group_size=cfg.moe_group_size,
+                                   dist_mesh=dist_mesh,
+                                   dist_schedule=dist_schedule)
     else:
         m = L.mlp(blk["mlp"], L.rmsnorm(h, blk["ln2"], cfg.norm_eps),
-                  cfg.mlp_act)
+                  cfg.mlp_act, mm=mm)
     return h + m, aux
 
 
 def forward_lm(params: Dict, cfg: ModelConfig, tokens: jax.Array,
                positions: Optional[jax.Array] = None,
-               vision_embeds: Optional[jax.Array] = None) -> jax.Array:
-    """tokens: [B,S] -> hidden [B,S,d] (pre-logits, final-normed)."""
+               vision_embeds: Optional[jax.Array] = None,
+               dist_mesh=None,
+               dist_schedule: str = "allgather") -> jax.Array:
+    """tokens: [B,S] -> hidden [B,S,d] (pre-logits, final-normed).
+
+    ``dist_mesh`` routes every projection through
+    `repro.dist.matmul.matmul_distributed` (see `repro.dist.lm`); the
+    layer loop is then unrolled in Python — shard_map inside lax.scan is
+    off the supported path — while the dense path keeps the scan."""
     b, s = tokens.shape
     h = L.embed(params["emb"], tokens)
     if vision_embeds is not None:  # VLM stub frontend: prefix embeddings
@@ -98,6 +122,29 @@ def forward_lm(params: Dict, cfg: ModelConfig, tokens: jax.Array,
     if positions is None:
         positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
     windows = layer_windows(cfg)
+
+    if dist_mesh is not None:
+        mm = _make_mm(dist_mesh, dist_schedule)
+
+        def step(blk, hh, win):
+            return _block_apply(blk, hh, cfg=cfg, positions=positions,
+                                window=win, mm=mm, dist_mesh=dist_mesh,
+                                dist_schedule=dist_schedule)
+
+        if cfg.remat:
+            policy = jax.checkpoint_policies.save_only_these_names(
+                "flash_out", "flash_lse")
+            step = jax.checkpoint(step, policy=policy)
+        aux = jnp.float32(0.0)
+        for i in range(cfg.n_layers):
+            blk = jax.tree_util.tree_map(lambda a, i=i: a[i],
+                                         params["blocks"])
+            h, aux_i = step(blk, h, windows[i])
+            h = L.shard_residual(h)
+            aux = aux + aux_i
+        h = L.rmsnorm(h, params["ln_f"], cfg.norm_eps)
+        forward_lm._last_aux = aux
+        return h
 
     def body(carry, xs):
         hh, aux_sum = carry
@@ -119,10 +166,12 @@ def forward_lm(params: Dict, cfg: ModelConfig, tokens: jax.Array,
     return h
 
 
-def loss_lm(params: Dict, cfg: ModelConfig, batch: Dict) -> jax.Array:
+def loss_lm(params: Dict, cfg: ModelConfig, batch: Dict,
+            dist_mesh=None, dist_schedule: str = "allgather") -> jax.Array:
     h = forward_lm(params, cfg, batch["tokens"],
                    positions=batch.get("positions"),
-                   vision_embeds=batch.get("vision_embeds"))
+                   vision_embeds=batch.get("vision_embeds"),
+                   dist_mesh=dist_mesh, dist_schedule=dist_schedule)
     ce = L.chunked_cross_entropy(h, params["emb"]["lm_head"],
                                  batch["labels"])
     if cfg.is_moe:
@@ -133,74 +182,127 @@ def loss_lm(params: Dict, cfg: ModelConfig, batch: Dict) -> jax.Array:
 
 # ---------------------------------------------------------------- serve ---
 
-def init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> Dict:
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, *,
+               per_slot: bool = False) -> Dict:
+    """KV cache.  ``per_slot=True`` makes ``len`` a per-sequence [B]
+    vector (continuous batching: each slot advances independently)."""
     shape = (cfg.n_layers, batch, max_seq, cfg.n_kv_heads, cfg.head_dim)
+    ln = (jnp.zeros((batch,), jnp.int32) if per_slot
+          else jnp.zeros((), jnp.int32))
     return {
         "k": jnp.zeros(shape, cfg.jdtype),
         "v": jnp.zeros(shape, cfg.jdtype),
-        "len": jnp.zeros((), jnp.int32),
+        "len": ln,
     }
 
 
 def _cached_attention(blk: Dict, h: jax.Array, cache_k, cache_v, *,
                       cfg: ModelConfig, pos: jax.Array,
-                      window: jax.Array,
+                      window: jax.Array, mm=None,
                       ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Single-token attention against the cache.  h: [B,1,d];
-    cache_k/v: [B,Smax,G,hd]; pos: scalar current length."""
+    cache_k/v: [B,Smax,G,hd]; pos: scalar current length, or a [B]
+    vector of per-slot lengths (continuous batching)."""
     b = h.shape[0]
+    mm = mm if mm is not None else L._dense_mm
     hd, nh, g = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    per_slot = pos.ndim == 1
     x = L.rmsnorm(h, blk["ln1"], cfg.norm_eps)
-    q = (x @ blk["attn"]["wq"]).reshape(b, 1, nh, hd)
-    k = (x @ blk["attn"]["wk"]).reshape(b, 1, g, hd)
-    v = (x @ blk["attn"]["wv"]).reshape(b, 1, g, hd)
-    posb = jnp.broadcast_to(pos[None], (b,))[:, None].astype(jnp.int32)
+    q = mm(x, blk["attn"]["wq"]).reshape(b, 1, nh, hd)
+    k = mm(x, blk["attn"]["wk"]).reshape(b, 1, g, hd)
+    v = mm(x, blk["attn"]["wv"]).reshape(b, 1, g, hd)
+    posb = (pos[:, None] if per_slot
+            else jnp.broadcast_to(pos[None], (b,))[:, None]
+            ).astype(jnp.int32)
     mrope = cfg.mrope_sections if cfg.mrope_sections[0] else None
     if mrope is not None:
-        pos3 = jnp.broadcast_to(pos[None, None, None],
-                                (b, 3, 1)).astype(jnp.int32)
+        pos3 = jnp.broadcast_to(posb[:, None, :], (b, 3, 1)
+                                ).astype(jnp.int32)
         q = L.apply_mrope(q, pos3, cfg.rope_theta, mrope)
         k = L.apply_mrope(k, pos3, cfg.rope_theta, mrope)
     else:
         q = L.apply_rope(q, posb, cfg.rope_theta)
         k = L.apply_rope(k, posb, cfg.rope_theta)
-    cache_k = lax.dynamic_update_slice(cache_k, k, (0, pos, 0, 0))
-    cache_v = lax.dynamic_update_slice(cache_v, v, (0, pos, 0, 0))
+    if per_slot:
+        cache_k = cache_k.at[jnp.arange(b), pos].set(k[:, 0])
+        cache_v = cache_v.at[jnp.arange(b), pos].set(v[:, 0])
+    else:
+        cache_k = lax.dynamic_update_slice(cache_k, k, (0, pos, 0, 0))
+        cache_v = lax.dynamic_update_slice(cache_v, v, (0, pos, 0, 0))
     kk = L._repeat_kv(cache_k, nh // g)
     vv = L._repeat_kv(cache_v, nh // g)
     smax = cache_k.shape[1]
     kpos = jnp.arange(smax)
-    valid = kpos <= pos
-    valid &= jnp.where(window > 0, kpos > pos - window, True)
-    out = L.attention_scores(q, kk, vv, mask=valid[None, None, None, :],
-                             scale=hd ** -0.5)
-    a = out.reshape(b, 1, nh * hd) @ blk["attn"]["wo"]
+    if per_slot:
+        valid = kpos[None, :] <= pos[:, None]
+        valid &= jnp.where(window > 0,
+                           kpos[None, :] > pos[:, None] - window, True)
+        mask = valid[:, None, None, :]
+    else:
+        valid = kpos <= pos
+        valid &= jnp.where(window > 0, kpos > pos - window, True)
+        mask = valid[None, None, None, :]
+    out = L.attention_scores(q, kk, vv, mask=mask, scale=hd ** -0.5)
+    a = mm(out.reshape(b, 1, nh * hd), blk["attn"]["wo"])
     return a, cache_k, cache_v
 
 
+def _decode_block(blk: Dict, hh: jax.Array, ck, cv, *, cfg: ModelConfig,
+                  pos: jax.Array, window: jax.Array, mm=None,
+                  dist_mesh=None, dist_schedule: str = "allgather"):
+    a, ck, cv = _cached_attention(blk, hh, ck, cv, cfg=cfg, pos=pos,
+                                  window=window, mm=mm)
+    hh = hh + a
+    if cfg.is_moe:
+        m, _ = moe_mod.moe_layer(blk["moe"],
+                                 L.rmsnorm(hh, blk["ln2"], cfg.norm_eps),
+                                 top_k=cfg.top_k,
+                                 capacity_factor=cfg.capacity_factor,
+                                 group_size=cfg.moe_group_size,
+                                 dist_mesh=dist_mesh,
+                                 dist_schedule=dist_schedule)
+    else:
+        m = L.mlp(blk["mlp"], L.rmsnorm(hh, blk["ln2"], cfg.norm_eps),
+                  cfg.mlp_act, mm=mm)
+    return hh + m, ck, cv
+
+
 def decode_step(params: Dict, cfg: ModelConfig, cache: Dict,
-                tokens: jax.Array) -> Tuple[jax.Array, Dict]:
-    """tokens: [B,1] -> (logits [B,1,V], updated cache)."""
+                tokens: jax.Array, *, dist_mesh=None,
+                dist_schedule: str = "allgather"
+                ) -> Tuple[jax.Array, Dict]:
+    """tokens: [B,1] -> (logits [B,1,V], updated cache).
+
+    ``cache["len"]`` may be a scalar or a per-slot [B] vector; with
+    ``dist_mesh`` every projection runs through `matmul_distributed`
+    (layer loop unrolled — see `forward_lm`)."""
     h = L.embed(params["emb"], tokens)
     pos = cache["len"]
     windows = layer_windows(cfg)
 
+    if dist_mesh is not None:
+        mm = _make_mm(dist_mesh, dist_schedule)
+        ks, vs = [], []
+        for i in range(cfg.n_layers):
+            blk = jax.tree_util.tree_map(lambda a, i=i: a[i],
+                                         params["blocks"])
+            h, ck, cv = _decode_block(
+                blk, h, cache["k"][i], cache["v"][i], cfg=cfg, pos=pos,
+                window=windows[i], mm=mm, dist_mesh=dist_mesh,
+                dist_schedule=dist_schedule)
+            ks.append(ck)
+            vs.append(cv)
+        h = L.rmsnorm(h, params["ln_f"], cfg.norm_eps)
+        logits = mm(h, params["emb"]["lm_head"]).astype(jnp.float32)
+        return logits, {"k": jnp.stack(ks), "v": jnp.stack(vs),
+                        "len": pos + 1}
+
     def body(carry, xs):
         hh = carry
         blk, win, ck, cv = xs
-        a, ck, cv = _cached_attention(blk, hh, ck, cv, cfg=cfg, pos=pos,
-                                      window=win)
-        hh = hh + a
-        if cfg.is_moe:
-            m, _ = moe_mod.moe_layer(blk["moe"],
-                                     L.rmsnorm(hh, blk["ln2"], cfg.norm_eps),
-                                     top_k=cfg.top_k,
-                                     capacity_factor=cfg.capacity_factor,
-                                     group_size=cfg.moe_group_size)
-        else:
-            m = L.mlp(blk["mlp"], L.rmsnorm(hh, blk["ln2"], cfg.norm_eps),
-                      cfg.mlp_act)
-        return hh + m, (ck, cv)
+        hh, ck, cv = _decode_block(blk, hh, ck, cv, cfg=cfg, pos=pos,
+                                   window=win)
+        return hh, (ck, cv)
 
     h, (ks, vs) = lax.scan(body, h, (params["blocks"], windows,
                                      cache["k"], cache["v"]))
@@ -210,48 +312,90 @@ def decode_step(params: Dict, cfg: ModelConfig, cache: Dict,
     return logits, new_cache
 
 
+def _prefill_block(blk: Dict, hh: jax.Array, ck, cv, *, cfg: ModelConfig,
+                   positions: jax.Array, window: jax.Array, mm=None,
+                   dist_mesh=None, dist_schedule: str = "allgather"):
+    b, s = hh.shape[0], hh.shape[1]
+    mm = mm if mm is not None else L._dense_mm
+    mrope = cfg.mrope_sections if cfg.mrope_sections[0] else None
+    x = L.rmsnorm(hh, blk["ln1"], cfg.norm_eps)
+    q = mm(x, blk["attn"]["wq"]).reshape(b, s, cfg.n_heads, cfg.head_dim)
+    k = mm(x, blk["attn"]["wk"]).reshape(b, s, cfg.n_kv_heads,
+                                         cfg.head_dim)
+    v = mm(x, blk["attn"]["wv"]).reshape(b, s, cfg.n_kv_heads,
+                                         cfg.head_dim)
+    if mrope is not None:
+        pos3 = jnp.broadcast_to(positions[:, None, :], (b, 3, s))
+        q = L.apply_mrope(q, pos3, cfg.rope_theta, mrope)
+        k = L.apply_mrope(k, pos3, cfg.rope_theta, mrope)
+    else:
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+    ck = lax.dynamic_update_slice(ck, k, (0, 0, 0, 0))
+    cv = lax.dynamic_update_slice(cv, v, (0, 0, 0, 0))
+    o = L.attention_core(q, k, v, causal=True, window=window,
+                         scale=cfg.head_dim ** -0.5)
+    hh = hh + mm(o.reshape(b, s, -1), blk["attn"]["wo"])
+    if cfg.is_moe:
+        m, _ = moe_mod.moe_layer(blk["moe"],
+                                 L.rmsnorm(hh, blk["ln2"], cfg.norm_eps),
+                                 top_k=cfg.top_k,
+                                 capacity_factor=cfg.capacity_factor,
+                                 group_size=cfg.moe_group_size,
+                                 dist_mesh=dist_mesh,
+                                 dist_schedule=dist_schedule)
+    else:
+        m = L.mlp(blk["mlp"], L.rmsnorm(hh, blk["ln2"], cfg.norm_eps),
+                  cfg.mlp_act, mm=mm)
+    return hh + m, ck, cv
+
+
 def prefill(params: Dict, cfg: ModelConfig, cache: Dict,
-            tokens: jax.Array) -> Tuple[jax.Array, Dict]:
-    """Fill the cache with a full prompt; returns last-position logits."""
+            tokens: jax.Array, *, last_pos: Optional[jax.Array] = None,
+            dist_mesh=None, dist_schedule: str = "allgather"
+            ) -> Tuple[jax.Array, Dict]:
+    """Fill the cache with a full prompt; returns last-position logits.
+
+    ``last_pos`` (scalar index) reads the logits at that position
+    instead of ``-1`` — used when the prompt is right-padded to a
+    prefill bucket length (causal attention keeps positions < the true
+    length exact under right padding)."""
     b, s = tokens.shape
     h = L.embed(params["emb"], tokens)
     positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
     windows = layer_windows(cfg)
-    mrope = cfg.mrope_sections if cfg.mrope_sections[0] else None
 
-    def body(carry, xs):
-        hh = carry
-        blk, win, ck, cv = xs
-        x = L.rmsnorm(hh, blk["ln1"], cfg.norm_eps)
-        q = (x @ blk["attn"]["wq"]).reshape(b, s, cfg.n_heads, cfg.head_dim)
-        k = (x @ blk["attn"]["wk"]).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
-        v = (x @ blk["attn"]["wv"]).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
-        if mrope is not None:
-            pos3 = jnp.broadcast_to(positions[:, None, :], (b, 3, s))
-            q = L.apply_mrope(q, pos3, cfg.rope_theta, mrope)
-            k = L.apply_mrope(k, pos3, cfg.rope_theta, mrope)
-        else:
-            q = L.apply_rope(q, positions, cfg.rope_theta)
-            k = L.apply_rope(k, positions, cfg.rope_theta)
-        ck = lax.dynamic_update_slice(ck, k, (0, 0, 0, 0))
-        cv = lax.dynamic_update_slice(cv, v, (0, 0, 0, 0))
-        o = L.attention_core(q, k, v, causal=True, window=win,
-                             scale=cfg.head_dim ** -0.5)
-        hh = hh + o.reshape(b, s, -1) @ blk["attn"]["wo"]
-        if cfg.is_moe:
-            m, _ = moe_mod.moe_layer(blk["moe"],
-                                     L.rmsnorm(hh, blk["ln2"], cfg.norm_eps),
-                                     top_k=cfg.top_k,
-                                     capacity_factor=cfg.capacity_factor,
-                                     group_size=cfg.moe_group_size)
-        else:
-            m = L.mlp(blk["mlp"], L.rmsnorm(hh, blk["ln2"], cfg.norm_eps),
-                      cfg.mlp_act)
-        return hh + m, (ck, cv)
+    if dist_mesh is not None:
+        mm = _make_mm(dist_mesh, dist_schedule)
+        ks, vs = [], []
+        for i in range(cfg.n_layers):
+            blk = jax.tree_util.tree_map(lambda a, i=i: a[i],
+                                         params["blocks"])
+            h, ck, cv = _prefill_block(
+                blk, h, cache["k"][i], cache["v"][i], cfg=cfg,
+                positions=positions, window=windows[i], mm=mm,
+                dist_mesh=dist_mesh, dist_schedule=dist_schedule)
+            ks.append(ck)
+            vs.append(cv)
+        ks, vs = jnp.stack(ks), jnp.stack(vs)
+    else:
+        mm = None
 
-    body_fn = jax.checkpoint(body) if cfg.remat else body
-    h, (ks, vs) = lax.scan(body_fn, h, (params["blocks"], windows,
-                                        cache["k"], cache["v"]))
-    h = L.rmsnorm(h[:, -1:], params["ln_f"], cfg.norm_eps)
-    logits = (h @ params["emb"]["lm_head"]).astype(jnp.float32)
-    return logits, {"k": ks, "v": vs, "len": jnp.int32(s)}
+        def body(carry, xs):
+            hh = carry
+            blk, win, ck, cv = xs
+            hh, ck, cv = _prefill_block(blk, hh, ck, cv, cfg=cfg,
+                                        positions=positions, window=win)
+            return hh, (ck, cv)
+
+        body_fn = jax.checkpoint(body) if cfg.remat else body
+        h, (ks, vs) = lax.scan(body_fn, h, (params["blocks"], windows,
+                                            cache["k"], cache["v"]))
+    h = h[:, last_pos][:, None] if last_pos is not None else h[:, -1:]
+    h = L.rmsnorm(h, params["ln_f"], cfg.norm_eps)
+    if mm is not None:
+        logits = mm(h, params["emb"]["lm_head"]).astype(jnp.float32)
+    else:
+        logits = (h @ params["emb"]["lm_head"]).astype(jnp.float32)
+    length = jnp.int32(s) if last_pos is None else jnp.int32(last_pos) + 1
+    return logits, {"k": ks, "v": vs, "len": length}

@@ -59,9 +59,16 @@ def init_moe(key, d_model: int, d_ff: int, n_experts: int,
 
 
 def moe_layer(params: Dict, x: jax.Array, *, top_k: int,
-              capacity_factor: float = 1.25, group_size: int = 4096
+              capacity_factor: float = 1.25, group_size: int = 4096,
+              dist_mesh=None, dist_schedule: str = "allgather"
               ) -> Tuple[jax.Array, jax.Array]:
-    """x: [B, S, d] -> (out [B, S, d], aux_loss scalar)."""
+    """x: [B, S, d] -> (out [B, S, d], aux_loss scalar).
+
+    With ``dist_mesh`` (a ``(Pm, Pn, Pc)`` serving mesh) the expert
+    contractions run through
+    :func:`repro.dist.lm.expert_ffn_distributed` — experts sharded over
+    the contraction (c) ring, the expert ff dim over n — when the shapes
+    divide the grid; otherwise the dense path below runs unchanged."""
     b, s, d = x.shape
     e = params["router"].shape[1]
     n_tok = b * s
@@ -100,6 +107,15 @@ def moe_layer(params: Dict, x: jax.Array, *, top_k: int,
                   * onehot[:, :, slot].astype(jnp.float32))[..., None])
         disp = disp + sel.astype(x.dtype)
         comb = comb + sel * gate_vals[:, :, slot, None, None]
+
+    if dist_mesh is not None:
+        from repro.dist import lm as dist_lm
+        if dist_lm.moe_ffn_grid_divides(e, params["w_gate"].shape[2],
+                                        dist_lm.mesh_grid(dist_mesh)):
+            out = dist_lm.expert_ffn_distributed(
+                xg, disp, comb, params["w_gate"], params["w_up"],
+                params["w_down"], dist_mesh)
+            return out.reshape(b, s, d).astype(x.dtype), aux
 
     disp = _shard_dispatch(disp)
     comb = _shard_dispatch(comb)

@@ -142,6 +142,39 @@ def test_astlint_tree_skips_collectives_py(tmp_path):
     assert len(found) == 1 and found[0].path.endswith("other.py")
 
 
+# ----------------------------------------------------------- doc lint
+
+def test_doclint_repo_is_clean():
+    from repro.analysis import doclint
+    findings = doclint.lint_tree(doclint.default_root())
+    assert findings == [], "\n".join(str(f) for f in findings)
+
+
+def test_doclint_flags_stale_references(tmp_path):
+    from repro.analysis import doclint
+    (tmp_path / "Makefile").write_text("test:\n\techo hi\n")
+    src = tmp_path / "src" / "repro"
+    src.mkdir(parents=True)
+    (src / "x.py").write_text("import os\nos.environ['REPRO_REAL']\n")
+    (tmp_path / "README.md").write_text(textwrap.dedent("""
+        Run `make test` then `make bogus-target`.
+        Set `REPRO_REAL=1` or REPRO_MISSING.
+        See `src/repro/x.py` and `src/repro/gone.py`.
+        Try `python -m repro.x` and `python -m repro.gone`.
+        Prose about make targets is not a reference.
+        ```
+        make test
+        ```
+    """))
+    found = doclint.lint_tree(str(tmp_path))
+    msgs = sorted(f.message for f in found)
+    assert len(msgs) == 4, msgs
+    assert any("bogus-target" in m for m in msgs)
+    assert any("REPRO_MISSING" in m for m in msgs)
+    assert any("src/repro/gone.py" in m for m in msgs)
+    assert any("repro.gone" in m for m in msgs)
+
+
 # ===================================================== 8-device compiled ==
 
 @pytest.mark.subprocess
