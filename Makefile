@@ -1,8 +1,8 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test fast-test dist-test grad-test static-test verify-dist lint \
-	doclint demo serve-smoke autotune bench bench-full
+.PHONY: test fast-test dist-test grad-test static-test fault-test \
+	verify-dist lint doclint demo serve-smoke autotune bench bench-full
 
 test:  ## tier-1 verify (full suite, fail-fast)
 	$(PY) -m pytest -x -q
@@ -18,6 +18,9 @@ grad-test:  ## distributed-op VJP / gradient checks (incl. 8-device grids)
 
 static-test:  ## static-analysis verifier unit suite (no real devices)
 	$(PY) -m pytest -q -m static
+
+fault-test:  ## fault-injection / recovery-path suite (incl. kill-and-resume)
+	$(PY) -m pytest -q -m fault
 
 verify-dist:  ## prove the comm/memory invariants of every schedule cell
 	$(PY) -m repro.analysis.lint --report text

@@ -14,6 +14,14 @@ Saves can run asynchronously (background thread snapshots host copies);
 committed step.  At multi-host scale each host writes only the chunks of
 the shards it owns (addressable-shard enumeration) — single-host here, but
 the format is the multi-host one.
+
+Integrity: every chunk carries a crc32 in ``meta.msgpack`` (computed
+over the raw stored bytes), verified on restore.  A chunk that fails
+verification — silent disk corruption, a truncated write that somehow
+got committed — raises :class:`CorruptCheckpointError`;
+``CheckpointManager.restore_latest`` responds by falling back to the
+previous committed step instead of returning garbage
+(``docs/fault.md``).
 """
 
 from __future__ import annotations
@@ -21,7 +29,8 @@ from __future__ import annotations
 import os
 import shutil
 import threading
-from typing import Any, List, Optional, Tuple
+import zlib
+from typing import Any, Callable, List, Optional, Tuple
 
 import jax
 import ml_dtypes
@@ -29,6 +38,21 @@ import msgpack
 import numpy as np
 
 _SENTINEL = "_COMMITTED"
+
+#: Fault-injection/test hook: when set, called as ``_chunk_hook(leaf_id,
+#: chunk_idx)`` after each chunk write inside :func:`save` — raising from
+#: it simulates a crash mid-save (the ``.tmp`` dir is left uncommitted,
+#: the previous checkpoint stays intact).  See ``fault/inject.py``.
+_chunk_hook: Optional[Callable[[int, int], None]] = None
+
+
+class CheckpointError(RuntimeError):
+    """A checkpoint could not be restored (structural mismatch)."""
+
+
+class CorruptCheckpointError(CheckpointError):
+    """A committed checkpoint failed integrity verification (crc32
+    mismatch or missing chunk file)."""
 
 # numpy can't serialize ml_dtypes (bf16, fp8); store them as raw uint views
 _VIEW_DTYPES = {
@@ -75,18 +99,27 @@ def save(tree, directory: str, *, step: int, chunk_bytes: int = 1 << 28
         rows_per_chunk = max(1, chunk_bytes // per_row) if arr.ndim else 1
         n_chunks = (max(1, -(-arr.shape[0] // rows_per_chunk))
                     if arr.ndim else 1)
-        meta["leaves"].append({
-            "name": name, "shape": list(arr.shape), "dtype": dtype_name,
-            "id": i, "n_chunks": n_chunks,
-            "rows_per_chunk": rows_per_chunk if arr.ndim else 0,
-        })
+        crcs = []
         if arr.ndim == 0:
+            crcs.append(zlib.crc32(arr.tobytes()))
             np.save(os.path.join(tmp, f"{i}.c0.npy"), arr)
+            if _chunk_hook is not None:
+                _chunk_hook(i, 0)
         else:
             for j in range(n_chunks):
                 lo = j * rows_per_chunk
                 hi = min(arr.shape[0], lo + rows_per_chunk)
-                np.save(os.path.join(tmp, f"{i}.c{j}.npy"), arr[lo:hi])
+                chunk = np.ascontiguousarray(arr[lo:hi])
+                crcs.append(zlib.crc32(chunk.tobytes()))
+                np.save(os.path.join(tmp, f"{i}.c{j}.npy"), chunk)
+                if _chunk_hook is not None:
+                    _chunk_hook(i, j)
+        meta["leaves"].append({
+            "name": name, "shape": list(arr.shape), "dtype": dtype_name,
+            "id": i, "n_chunks": n_chunks,
+            "rows_per_chunk": rows_per_chunk if arr.ndim else 0,
+            "crc32": crcs,
+        })
     with open(os.path.join(tmp, "meta.msgpack"), "wb") as f:
         f.write(msgpack.packb(meta))
     with open(os.path.join(tmp, _SENTINEL), "w") as f:
@@ -96,9 +129,38 @@ def save(tree, directory: str, *, step: int, chunk_bytes: int = 1 << 28
     os.rename(tmp, directory)
 
 
+def _load_chunk(directory: str, info: dict, j: int,
+                leaf_name: str) -> np.ndarray:
+    """Load chunk ``j`` of a leaf, verifying its crc32 when the meta
+    carries one (checkpoints written before the integrity format simply
+    skip verification)."""
+    path = os.path.join(directory, f"{info['id']}.c{j}.npy")
+    if not os.path.exists(path):
+        raise CorruptCheckpointError(
+            f"checkpoint {directory}: chunk {info['id']}.c{j}.npy of "
+            f"leaf '{leaf_name}' is missing")
+    chunk = np.load(path)
+    crcs = info.get("crc32")
+    if crcs:
+        got = zlib.crc32(np.ascontiguousarray(chunk).tobytes())
+        if got != crcs[j]:
+            raise CorruptCheckpointError(
+                f"checkpoint {directory}: crc32 mismatch in chunk "
+                f"{info['id']}.c{j}.npy of leaf '{leaf_name}' "
+                f"(stored {crcs[j]:#010x}, got {got:#010x})")
+    return chunk
+
+
 def restore(tree_like, directory: str, *, shardings=None):
     """Rebuild the tree; optionally placing leaves with ``shardings``
-    (a matching tree of NamedSharding) — the elastic-resharding path."""
+    (a matching tree of NamedSharding) — the elastic-resharding path.
+
+    Raises :class:`CheckpointError` naming the offending leaf when the
+    checkpoint does not contain a leaf of ``tree_like``, and
+    :class:`CorruptCheckpointError` when a chunk is missing or fails
+    its crc32 (callers fall back to an older committed step — see
+    ``CheckpointManager.restore_latest``).
+    """
     with open(os.path.join(directory, "meta.msgpack"), "rb") as f:
         meta = msgpack.unpackb(f.read())
     by_name = {l["name"]: l for l in meta["leaves"]}
@@ -107,9 +169,14 @@ def restore(tree_like, directory: str, *, shardings=None):
                     else [None] * len(names))
     leaves = []
     for name, shd in zip(names, shard_leaves):
-        info = by_name[name]
-        chunks = [np.load(os.path.join(directory,
-                                       f"{info['id']}.c{j}.npy"))
+        info = by_name.get(name)
+        if info is None:
+            have = ", ".join(sorted(by_name)[:8])
+            raise CheckpointError(
+                f"checkpoint {directory} has no leaf '{name}' "
+                f"(has: {have}{', ...' if len(by_name) > 8 else ''}) — "
+                f"tree structure changed since the save?")
+        chunks = [_load_chunk(directory, info, j, name)
                   for j in range(info["n_chunks"])]
         arr = chunks[0] if len(chunks) == 1 and not info["shape"] \
             else np.concatenate(chunks, axis=0) if info["shape"] \
@@ -134,12 +201,16 @@ class CheckpointManager:
         return os.path.join(self.root, f"step_{step:09d}")
 
     def all_steps(self) -> List[int]:
+        """Committed steps, ascending.  Junk ``step_*`` directories (a
+        non-integer suffix — stray editor droppings, ``.tmp`` leftovers
+        renamed by hand) are skipped, not crashed on."""
         out = []
         for d in os.listdir(self.root):
             full = os.path.join(self.root, d)
-            if (d.startswith("step_")
+            suffix = d[len("step_"):] if d.startswith("step_") else ""
+            if (suffix.isdigit()
                     and os.path.exists(os.path.join(full, _SENTINEL))):
-                out.append(int(d.split("_")[1]))
+                out.append(int(suffix))
         return sorted(out)
 
     def latest_step(self) -> Optional[int]:
@@ -161,11 +232,23 @@ class CheckpointManager:
         for s in self.all_steps()[:-self.keep]:
             shutil.rmtree(self._dir(s), ignore_errors=True)
 
-    def restore_latest(self, tree_like, *, shardings=None):
-        step = self.latest_step()
-        if step is None:
-            return None, None
-        return restore(tree_like, self._dir(step), shardings=shardings)
+    def restore_latest(self, tree_like, *, shardings=None,
+                       on_corrupt: Optional[Callable[[int, Exception],
+                                                     None]] = None):
+        """Restore the newest committed step that passes integrity
+        verification.  A step whose chunks fail crc32 (or went missing)
+        is reported through ``on_corrupt(step, exc)`` and skipped —
+        restore falls back to the previous committed step rather than
+        returning garbage.  The corrupt directory is left on disk for
+        forensics; retention will age it out."""
+        for step in reversed(self.all_steps()):
+            try:
+                return restore(tree_like, self._dir(step),
+                               shardings=shardings)
+            except CorruptCheckpointError as e:
+                if on_corrupt is not None:
+                    on_corrupt(step, e)
+        return None, None
 
     def wait(self):
         if self._async_thread is not None and self._async_thread.is_alive():

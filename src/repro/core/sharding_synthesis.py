@@ -241,6 +241,76 @@ def synthesize_dist_grid(x_shape, w_shape, n_devices: int, *,
     return best
 
 
+def synthesize_cnn_grid(x_shape, channels, n_classes: int,
+                        n_devices: int, *, k: int = 3,
+                        pool_every: int = 2,
+                        schedule: str = "allgather",
+                        mem_cap_elems: Optional[float] = None
+                        ) -> DistGridChoice:
+    """Choose ONE ``(Pb, Ph, Pw, Pk, Pc)`` grid for a whole CNN.
+
+    Per-layer synthesis (:func:`synthesize_dist_grid`) can pick a
+    different grid per conv; a train step needs a single grid every
+    layer divides (activations flow layer to layer on the shared batch
+    axes).  Enumerates every 5-factorization of ``n_devices``, keeps
+    those where *every* conv layer satisfies the runtime divisibility
+    constraints (``dist.train.grid_divides_cnn``), and minimizes the
+    summed per-layer ``cost_distributed_train`` with the runtime
+    fwd+bwd wire total (``cnn_train_comm_elems``) as tie-break.
+
+    This is the elastic-restart re-synthesis entry point: after losing
+    hosts, the resilient train loop calls it over the *surviving*
+    device count and restores the (device-count-agnostic) checkpoint
+    onto the new grid — ``fault.monitor.ElasticPlan.plan_cnn`` wraps it
+    as a decision record.  ``mem_cap_elems`` discards grids whose worst
+    per-layer peak (``cnn_train_mem_elems``) exceeds the cap.
+    """
+    from repro.core.grid import grid_from_tuple
+    from repro.dist.train import (_cnn_layer_shapes, cnn_train_comm_elems,
+                                  cnn_train_mem_elems, grid_divides_cnn)
+
+    problems = []
+    for (N, C, H, W), (K, _, kh, kw) in _cnn_layer_shapes(
+            x_shape, channels, k=k, pool_every=pool_every):
+        problems.append(ConvProblem(Nb=N, Nk=K, Nc=C, Nh=H, Nw=W,
+                                    Nr=kh, Ns=kw))
+    best: Optional[DistGridChoice] = None
+    best_key = None
+    capped_out = 0
+    for grid in _factorizations(n_devices, 5):
+        if not grid_divides_cnn(x_shape, channels, grid, k=k,
+                                pool_every=pool_every):
+            continue
+        model_cost = sum(
+            cost_model.cost_distributed_train(
+                p, n_devices, grid_from_tuple(p, grid).solution.choice)
+            for p in problems)
+        comm = cnn_train_comm_elems(x_shape, channels, n_classes, grid,
+                                    k=k, pool_every=pool_every,
+                                    schedule=schedule)
+        mem = cnn_train_mem_elems(x_shape, channels, n_classes, grid,
+                                  k=k, pool_every=pool_every,
+                                  schedule=schedule)["peak"]
+        if mem_cap_elems is not None and mem > mem_cap_elems:
+            capped_out += 1
+            continue
+        key = (model_cost, comm["total"], grid)
+        if best_key is None or key < best_key:
+            best_key = key
+            best = DistGridChoice(grid=grid, algo=_algo_family(grid),
+                                  model_cost=model_cost,
+                                  comm_elems=comm, mem_elems=mem)
+    if best is None:
+        detail = (f" under mem cap {mem_cap_elems:.3e} elems "
+                  f"({capped_out} grids over cap)"
+                  if mem_cap_elems is not None and capped_out else "")
+        raise ValueError(
+            f"no (Pb,Ph,Pw,Pk,Pc) factorization of {n_devices} devices "
+            f"divides every layer of CNN x{tuple(x_shape)} "
+            f"channels={list(channels)}{detail}")
+    return best
+
+
 @dataclasses.dataclass(frozen=True)
 class ServeGridChoice:
     """A ``(Pm, Pn, Pc)`` serving grid for the LM decode path."""

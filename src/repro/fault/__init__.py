@@ -1,1 +1,26 @@
-"""fault subsystem."""
+"""Fault-tolerant runtime: monitoring, watchdog, deterministic fault
+injection, elastic-restart planning.
+
+- ``monitor``: StragglerMonitor / Heartbeat / EmergencySaver /
+  ElasticPlan (incl. grid-aware ``plan_conv``/``plan_cnn``/``plan_serve``
+  re-synthesis);
+- ``watchdog``: StepWatchdog around the step future + the structured
+  FaultEvent / FaultLog record every recovery path reports through;
+- ``inject``: FaultPlan / FaultInjector — deterministic, JSON-scriptable
+  fault injection (SIGTERM, wedge, mid-save crash, chunk corruption)
+  so every recovery path is testable (``tests/test_fault_injection.py``).
+
+Runbook: ``docs/fault.md``.
+"""
+
+from repro.fault.inject import (FaultInjector, FaultPlan, FaultSpec,
+                                MidSaveCrash)
+from repro.fault.monitor import (ElasticPlan, EmergencySaver, Heartbeat,
+                                 StragglerMonitor)
+from repro.fault.watchdog import FaultEvent, FaultLog, StepWatchdog
+
+__all__ = [
+    "ElasticPlan", "EmergencySaver", "FaultEvent", "FaultInjector",
+    "FaultLog", "FaultPlan", "FaultSpec", "Heartbeat", "MidSaveCrash",
+    "StepWatchdog", "StragglerMonitor",
+]

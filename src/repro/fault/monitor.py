@@ -7,7 +7,9 @@ into ANY mesh); (b) stragglers — detected here from step-time EMA
 z-scores; the runner responds by checkpointing and excluding the slow host
 (the data pipeline's (step, host) -> batch contract makes re-balancing
 coordination-free); (c) wedged collectives — watchdog timeout around the
-step future triggers an emergency save.
+step future triggers an emergency save (``fault/watchdog.py``
+StepWatchdog; the loop wiring lives in ``dist/train.py``
+make_resilient_train_loop, fault injection in ``fault/inject.py``).
 """
 
 from __future__ import annotations
@@ -122,7 +124,23 @@ class EmergencySaver:
 @dataclasses.dataclass(frozen=True)
 class ElasticPlan:
     """Decision record for an elastic restart: given surviving devices,
-    choose the largest feasible mesh and the resharding strategy."""
+    choose the largest feasible mesh and the resharding strategy.
+
+    Two regimes:
+
+    * :meth:`plan` — the simple GSPMD data/model mesh: keep the model
+      axis, shrink data parallelism to the survivors;
+    * :meth:`plan_conv` / :meth:`plan_cnn` / :meth:`plan_serve` — the
+      ``repro.dist`` runtime grids, where the optimal
+      ``(Pb, Ph, Pw, Pk, Pc)`` / ``(Pm, Pn, Pc)`` factorization is a
+      function of the device count (the 2.5D memory/wire tradeoff), so
+      losing a host means *re-synthesizing* the grid over the
+      survivors, not just shrinking an axis.  These delegate to
+      ``core.sharding_synthesis.synthesize_dist_grid`` /
+      ``synthesize_cnn_grid`` / ``synthesize_serve_grid``; the chunked
+      checkpoint format re-assembles and re-shards onto whatever grid
+      comes back.
+    """
 
     old_shape: tuple
     new_shape: tuple
@@ -132,14 +150,79 @@ class ElasticPlan:
     def plan(old_shape: tuple, n_devices: int, *, model_axis: int
              ) -> "ElasticPlan":
         """Keep the model axis (TP degree is architecture-determined),
-        shrink the data axis to what the surviving devices support."""
+        shrink the data axis to what the surviving devices support.
+
+        Only data/model-style meshes of rank >= 2 are plannable here —
+        anything else (a runtime conv/matmul grid, a rank-1 mesh) is
+        refused; use the grid-aware planners instead of silently
+        writing the data degree into an axis that means something else.
+        """
+        rank = len(old_shape)
+        if rank < 2:
+            raise ValueError(
+                f"ElasticPlan.plan needs a rank>=2 data/model mesh, got "
+                f"{old_shape}; runtime grids re-synthesize via "
+                f"plan_conv/plan_cnn/plan_serve")
+        if not -rank <= model_axis < rank:
+            raise ValueError(
+                f"model_axis {model_axis} out of range for mesh shape "
+                f"{old_shape}")
+        model_axis %= rank
         model = old_shape[model_axis]
+        if model < 1 or n_devices < model:
+            raise ValueError(
+                f"cannot keep model degree {model} of {old_shape} with "
+                f"only {n_devices} surviving devices")
         data = max(1, n_devices // model)
-        new = list(old_shape)
-        # fold everything that isn't the model axis into data
-        for i in range(len(new)):
-            if i != model_axis:
-                new[i] = 1
+        new = [1] * rank
+        new[model_axis] = model
+        # fold all data parallelism into the leading non-model axis
         new[0 if model_axis != 0 else 1] = data
-        return ElasticPlan(old_shape=old_shape, new_shape=tuple(new),
-                           reshard=tuple(new) != old_shape)
+        return ElasticPlan(old_shape=tuple(old_shape),
+                           new_shape=tuple(new),
+                           reshard=tuple(new) != tuple(old_shape))
+
+    @staticmethod
+    def plan_conv(old_grid: tuple, x_shape, w_shape, n_devices: int, *,
+                  stride=(1, 1), padding="SAME",
+                  schedule: str = "allgather",
+                  mem_cap_elems=None) -> "ElasticPlan":
+        """Re-synthesize a single conv layer's ``(Pb,Ph,Pw,Pk,Pc)``
+        grid over the surviving devices."""
+        from repro.core.sharding_synthesis import synthesize_dist_grid
+        choice = synthesize_dist_grid(
+            x_shape, w_shape, n_devices, stride=stride, padding=padding,
+            schedule=schedule, mem_cap_elems=mem_cap_elems)
+        return ElasticPlan(old_shape=tuple(old_grid),
+                           new_shape=tuple(choice.grid),
+                           reshard=tuple(choice.grid) != tuple(old_grid))
+
+    @staticmethod
+    def plan_cnn(old_grid: tuple, x_shape, channels, n_classes: int,
+                 n_devices: int, *, k: int = 3, pool_every: int = 2,
+                 schedule: str = "allgather",
+                 mem_cap_elems=None) -> "ElasticPlan":
+        """Re-synthesize ONE ``(Pb,Ph,Pw,Pk,Pc)`` grid that divides
+        every layer of the CNN — the whole-model elastic restart."""
+        from repro.core.sharding_synthesis import synthesize_cnn_grid
+        choice = synthesize_cnn_grid(
+            x_shape, channels, n_classes, n_devices, k=k,
+            pool_every=pool_every, schedule=schedule,
+            mem_cap_elems=mem_cap_elems)
+        return ElasticPlan(old_shape=tuple(old_grid),
+                           new_shape=tuple(choice.grid),
+                           reshard=tuple(choice.grid) != tuple(old_grid))
+
+    @staticmethod
+    def plan_serve(old_grid: tuple, cfg, n_devices: int, *, slots: int,
+                   max_seq: int, schedule: str = "allgather",
+                   mem_cap_elems=None) -> "ElasticPlan":
+        """Re-synthesize the LM serving ``(Pm,Pn,Pc)`` grid over the
+        surviving devices (KV-cache memory cap still enforced)."""
+        from repro.core.sharding_synthesis import synthesize_serve_grid
+        choice = synthesize_serve_grid(
+            cfg, n_devices, slots=slots, max_seq=max_seq,
+            schedule=schedule, mem_cap_elems=mem_cap_elems)
+        return ElasticPlan(old_shape=tuple(old_grid),
+                           new_shape=tuple(choice.grid),
+                           reshard=tuple(choice.grid) != tuple(old_grid))

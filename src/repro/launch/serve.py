@@ -48,7 +48,15 @@ _TRANSFORMER_FAMILIES = ("dense", "moe", "vlm")
 
 @dataclass
 class Request:
-    """One generation request."""
+    """One generation request.
+
+    ``status`` is the structured per-request outcome: ``"ok"`` (served
+    to EOS/``max_new``), ``"rejected_oversize"`` / ``"rejected_backpressure"``
+    (admission refused it — ``error`` says why), or ``"deadline"``
+    (``deadline_s`` elapsed since submit; any tokens produced so far
+    stay in ``out``).  A bad request never raises out of the engine
+    loop — it retires with its status and serving continues.
+    """
 
     rid: int
     prompt: List[int]
@@ -56,6 +64,10 @@ class Request:
     out: List[int] = field(default_factory=list)
     prefill_ms: float = 0.0
     step_ms: List[float] = field(default_factory=list)
+    deadline_s: Optional[float] = None
+    status: str = "ok"
+    error: str = ""
+    t_submit: float = 0.0
 
 
 class ContinuousEngine:
@@ -69,7 +81,11 @@ class ContinuousEngine:
 
     def __init__(self, cfg, params, *, slots: int, max_seq: int,
                  dist_mesh=None, dist_schedule: str = "allgather",
-                 prefill_bucket: int = 16, eos_id: Optional[int] = None):
+                 prefill_bucket: int = 16, eos_id: Optional[int] = None,
+                 max_queue: Optional[int] = None,
+                 decode_watchdog_timeout_s: Optional[float] = None,
+                 state_dump_path: Optional[str] = None,
+                 fault_log=None, injector=None):
         import jax
         import jax.numpy as jnp
 
@@ -83,6 +99,14 @@ class ContinuousEngine:
         self.slots, self.max_seq = slots, max_seq
         self.bucket = prefill_bucket
         self.eos_id = eos_id
+        # degradation knobs: a bounded queue applies backpressure
+        # (reject-with-status, never unbounded growth); the decode
+        # watchdog snapshots engine bookkeeping when a decode wedges
+        self.max_queue = max_queue
+        self.decode_watchdog_timeout_s = decode_watchdog_timeout_s
+        self.state_dump_path = state_dump_path
+        self.fault_log = fault_log
+        self.injector = injector
         self.queue: deque = deque()
         self.active: List[Optional[Request]] = [None] * slots
         self.retired: List[Request] = []
@@ -131,13 +155,49 @@ class ContinuousEngine:
 
     # ------------------------------------------------------------- queue --
 
-    def submit(self, req: Request) -> None:
-        """Admission control: reject what can never fit the KV budget."""
+    def submit(self, req: Request) -> bool:
+        """Admission control: a request that can never fit the KV
+        budget, or arrives while the bounded queue is full, retires
+        immediately with a structured reject status — it never raises
+        out of the engine loop and never abandons queued requests.
+        Returns True when the request was queued."""
+        req.t_submit = time.monotonic()
         if len(req.prompt) + req.max_new > self.max_seq:
-            raise ValueError(
-                f"request {req.rid}: prompt {len(req.prompt)} + max_new "
-                f"{req.max_new} exceeds max_seq {self.max_seq}")
+            self._reject(
+                req, "rejected_oversize",
+                f"prompt {len(req.prompt)} + max_new {req.max_new} "
+                f"exceeds max_seq {self.max_seq}")
+            return False
+        if self.max_queue is not None and len(self.queue) >= self.max_queue:
+            self._reject(
+                req, "rejected_backpressure",
+                f"queue full ({self.max_queue} waiting)")
+            return False
         self.queue.append(req)
+        return True
+
+    def _reject(self, req: Request, status: str, error: str) -> None:
+        req.status, req.error = status, error
+        self.retired.append(req)
+
+    def _expired(self, req: Request, now: Optional[float] = None) -> bool:
+        if req.deadline_s is None:
+            return False
+        now = time.monotonic() if now is None else now
+        return now - req.t_submit > req.deadline_s
+
+    def _next_queued(self) -> Optional[Request]:
+        """Pop the next admissible request, retiring queued requests
+        whose deadline already passed (they would only waste a prefill)."""
+        while self.queue:
+            req = self.queue.popleft()
+            if self._expired(req):
+                self._reject(req, "deadline",
+                             f"deadline {req.deadline_s}s elapsed "
+                             f"before admission")
+                continue
+            return req
+        return None
 
     def _padded_len(self, plen: int) -> int:
         b = self.bucket
@@ -146,9 +206,11 @@ class ContinuousEngine:
     def _admit(self) -> None:
         jnp = self._jnp
         for slot in range(self.slots):
-            if self.active[slot] is not None or not self.queue:
+            if self.active[slot] is not None:
                 continue
-            req = self.queue.popleft()
+            req = self._next_queued()
+            if req is None:
+                break
             plen = len(req.prompt)
             padded = self._padded_len(plen)
             toks = jnp.asarray(
@@ -173,6 +235,14 @@ class ContinuousEngine:
             self.retired.append(req)
             self.active[slot] = None
 
+    def _retire_slot(self, slot: int, status: str, error: str) -> None:
+        """Retire an active slot early (deadline) — the slot frees for
+        the next queued request; tokens produced so far are kept."""
+        req = self.active[slot]
+        req.status, req.error = status, error
+        self.retired.append(req)
+        self.active[slot] = None
+
     # ------------------------------------------------------------ decode --
 
     def _decode_once(self) -> None:
@@ -189,6 +259,7 @@ class ContinuousEngine:
         nxt = [int(v) for v in logits[:, 0].argmax(-1)]  # host sync
         dt = (time.perf_counter() - t0) * 1e3
         self.decode_ms.append(dt)
+        now = time.monotonic()
         for slot, req in enumerate(self.active):
             if req is None:
                 continue
@@ -196,6 +267,13 @@ class ContinuousEngine:
             req.step_ms.append(dt)
             self.next_tok = self.next_tok.at[slot, 0].set(nxt[slot])
             self._maybe_retire(slot, nxt[slot])
+            if self.active[slot] is not None and self._expired(req, now):
+                # per-request deadline: retire the timed-out slot so it
+                # recycles instead of decoding for a caller that's gone
+                self._retire_slot(
+                    slot, "deadline",
+                    f"deadline {req.deadline_s}s exceeded after "
+                    f"{len(req.out)} tokens")
         # idle slots decode garbage rows; pin their length so the ring
         # write can never run off the cache end while a slot sits empty
         mask = jnp.asarray([r is not None for r in self.active])
@@ -212,16 +290,61 @@ class ContinuousEngine:
                                         self.max_seq, per_slot=True)
         self._decode_fn(self.params, throwaway, self.next_tok)
 
+    # ----------------------------------------------------- wedge handling --
+
+    def engine_state(self) -> Dict:
+        """Bookkeeping snapshot — what the decode watchdog checkpoints
+        when a decode wedges, so a restarted engine (or an operator)
+        knows exactly which requests were in flight."""
+        return {
+            "queued": [r.rid for r in self.queue],
+            "active": [{"rid": r.rid, "n_out": len(r.out)}
+                       for r in self.active if r is not None],
+            "retired": [{"rid": r.rid, "status": r.status,
+                         "n_out": len(r.out)} for r in self.retired],
+            "decode_steps": len(self.decode_ms),
+        }
+
+    def _on_decode_wedge(self, iteration: int, elapsed: float) -> None:
+        snap = dict(self.engine_state(), event="decode_wedge",
+                    iteration=iteration, elapsed_s=elapsed)
+        if self.state_dump_path:
+            import json
+            tmp = self.state_dump_path + ".tmp"
+            with open(tmp, "w") as f:
+                json.dump(snap, f, indent=1)
+            os.replace(tmp, self.state_dump_path)
+
     # ------------------------------------------------------------- serve --
 
     def serve(self, requests: List[Request]) -> Dict:
         for r in requests:
             self.submit(r)
+        wd = None
+        if self.decode_watchdog_timeout_s:
+            from repro.fault.watchdog import StepWatchdog
+            wd = StepWatchdog(self.decode_watchdog_timeout_s,
+                              on_wedge=self._on_decode_wedge,
+                              log=self.fault_log)
         t0 = time.perf_counter()
-        while self.queue or any(r is not None for r in self.active):
-            self._admit()
-            if any(r is not None for r in self.active):
-                self._decode_once()
+        iteration = 0
+        try:
+            while self.queue or any(r is not None for r in self.active):
+                self._admit()
+                if any(r is not None for r in self.active):
+                    if wd is not None:
+                        wd.arm(iteration)
+                    try:
+                        if self.injector is not None:
+                            self.injector.fire("decode", iteration)
+                        self._decode_once()
+                    finally:
+                        if wd is not None:
+                            wd.disarm()
+                iteration += 1
+        finally:
+            if wd is not None:
+                wd.close()
         wall = time.perf_counter() - t0
         return self._stats(wall)
 
@@ -234,6 +357,7 @@ class ContinuousEngine:
             return dms[min(int(q * len(dms)), len(dms) - 1)]
 
         decode_s = sum(self.decode_ms) / 1e3
+        statuses = {r.rid: r.status for r in reqs}
         return {
             "tokens": {r.rid: list(r.out) for r in reqs},
             "n_requests": len(reqs),
@@ -242,6 +366,13 @@ class ContinuousEngine:
             "tokens_per_s": n_tok / max(decode_s, 1e-9),
             "p50_ms": pct(0.50),
             "p99_ms": pct(0.99),
+            "statuses": statuses,
+            "errors": {r.rid: r.error for r in reqs if r.error},
+            "n_ok": sum(1 for s in statuses.values() if s == "ok"),
+            "n_rejected": sum(1 for s in statuses.values()
+                              if s.startswith("rejected")),
+            "n_deadline": sum(1 for s in statuses.values()
+                              if s == "deadline"),
         }
 
 
@@ -295,7 +426,8 @@ class Engine:
 # ------------------------------------------------------------------ run ---
 
 def _make_requests(cfg, *, requests: int, prompt_len: int, gen: int,
-                   seed: int) -> List[Request]:
+                   seed: int,
+                   deadline_s: Optional[float] = None) -> List[Request]:
     """Deterministic request set with varied prompt/output lengths so
     bucketed prefill and slot recycling are actually exercised."""
     import jax
@@ -305,7 +437,8 @@ def _make_requests(cfg, *, requests: int, prompt_len: int, gen: int,
         toks = jax.random.randint(jax.random.PRNGKey(seed * 1000 + i),
                                   (plen,), 0, cfg.vocab)
         out.append(Request(rid=i, prompt=[int(t) for t in toks],
-                           max_new=max(1, gen - (i % 3))))
+                           max_new=max(1, gen - (i % 3)),
+                           deadline_s=deadline_s))
     return out
 
 
@@ -313,13 +446,19 @@ def run(cfg, *, requests: int = 8, prompt_len: int = 16, gen: int = 16,
         slots: int = 4, max_seq: Optional[int] = None, grid=None,
         schedule: str = "allgather", mem_cap_elems: Optional[float] = None,
         seed: int = 0, params=None, prefill_bucket: int = 16,
-        warmup: bool = False) -> Dict:
+        warmup: bool = False, max_queue: Optional[int] = None,
+        deadline_s: Optional[float] = None,
+        decode_watchdog_timeout_s: Optional[float] = None,
+        state_dump_path: Optional[str] = None) -> Dict:
     """Serve a deterministic request set; the callable engine API.
 
     ``grid``: a ``(Pm, Pn, Pc)`` tuple, ``"auto"`` (synthesized over all
     visible devices via ``synthesize_serve_grid``), or ``None`` (dense).
-    Returns the stats dict of :meth:`ContinuousEngine.serve` plus the
-    grid/schedule and the analytic wire/memory accounting.
+    ``max_queue`` / ``deadline_s`` / ``decode_watchdog_timeout_s`` are
+    the degradation knobs (backpressure, per-request deadlines, wedge
+    state dump — see ``docs/fault.md``).  Returns the stats dict of
+    :meth:`ContinuousEngine.serve` plus the grid/schedule and the
+    analytic wire/memory accounting.
     """
     import jax
 
@@ -340,11 +479,14 @@ def run(cfg, *, requests: int = 8, prompt_len: int = 16, gen: int = 16,
     if grid is not None:
         from repro.dist.matmul import make_matmul_mesh
         mesh = make_matmul_mesh(tuple(grid))
-    engine = ContinuousEngine(cfg, params, slots=slots, max_seq=max_seq,
-                              dist_mesh=mesh, dist_schedule=schedule,
-                              prefill_bucket=prefill_bucket)
+    engine = ContinuousEngine(
+        cfg, params, slots=slots, max_seq=max_seq, dist_mesh=mesh,
+        dist_schedule=schedule, prefill_bucket=prefill_bucket,
+        max_queue=max_queue,
+        decode_watchdog_timeout_s=decode_watchdog_timeout_s,
+        state_dump_path=state_dump_path)
     reqs = _make_requests(cfg, requests=requests, prompt_len=prompt_len,
-                          gen=gen, seed=seed)
+                          gen=gen, seed=seed, deadline_s=deadline_s)
     if warmup:
         engine.warmup([len(r.prompt) for r in reqs])
     res = engine.serve(reqs)

@@ -216,11 +216,18 @@ def _engine(cfg, slots=2, max_seq=24, **kw):
 
 
 def test_engine_admission_rejects_oversized():
+    # oversize retires with a structured status — it never raises out
+    # of the serving loop and never blocks later admissible requests
     eng = _engine(_smoke_cfg(), max_seq=16)
-    with pytest.raises(ValueError, match="exceeds max_seq"):
-        eng.submit(Request(rid=0, prompt=[1] * 10, max_new=8))
+    big = Request(rid=0, prompt=[1] * 10, max_new=8)
+    assert eng.submit(big) is False
+    assert big.status == "rejected_oversize"
+    assert "exceeds max_seq" in big.error
+    assert [r.rid for r in eng.retired] == [0]
     # fits exactly: admitted
-    eng.submit(Request(rid=1, prompt=[1] * 8, max_new=8))
+    ok = Request(rid=1, prompt=[1] * 8, max_new=8)
+    assert eng.submit(ok) is True
+    assert ok.status == "ok"
     assert len(eng.queue) == 1
 
 
