@@ -2,7 +2,8 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test fast-test dist-test grad-test static-test fault-test \
-	verify-dist lint doclint demo serve-smoke autotune bench bench-full
+	verify-dist lint doclint demo serve-smoke autotune bench bench-full \
+	calib calib-test
 
 test:  ## tier-1 verify (full suite, fail-fast)
 	$(PY) -m pytest -x -q
@@ -50,3 +51,9 @@ bench:  ## CI smoke benchmark: writes BENCH_comm.json + BENCH_kernels.json
 
 bench-full:  ## full benchmark suite (all grids/layers + sharding sweep)
 	$(PY) benchmarks/run.py
+
+calib:  ## refit CALIB.json (+ error report) from the BENCH_*.json records
+	$(PY) -m repro.perf.calibrate
+
+calib-test:  ## calibrated-prediction gate: median rel error vs wall_ms
+	$(PY) -m pytest -q -m calib

@@ -40,12 +40,18 @@ FULL_LAYERS = ("conv1", "res2a_2b", "res3a_2b", "res4a_2b", "res5a_2b")
 
 
 def _time_us(fn, *args, reps=3):
-    fn(*args).block_until_ready()
-    t0 = time.perf_counter()
+    """(mean_us, std_us, reps) — the warmup rep (which also compiles and
+    pre-warms the autotune plan cache) is discarded, and each rep is
+    timed individually so records carry a noise estimate."""
+    fn(*args).block_until_ready()   # warmup (discarded)
+    times = []
     for _ in range(reps):
-        out = fn(*args)
-    out.block_until_ready()
-    return (time.perf_counter() - t0) / reps * 1e6
+        t0 = time.perf_counter()
+        fn(*args).block_until_ready()
+        times.append((time.perf_counter() - t0) * 1e6)
+    mean = sum(times) / reps
+    std = (sum((t - mean) ** 2 for t in times) / reps) ** 0.5
+    return mean, std, reps
 
 
 def _records(quick: bool) -> list:
@@ -69,17 +75,20 @@ def _records(quick: bool) -> list:
             "stencil": [p.Nr, p.Ns],
             "stride": [1, 1],
         }
-        t_xla = _time_us(lambda a, b: conv2d_same(a, b, use_pallas=False),
-                         x, w)
+        common["flops"] = p.flops()
+        t_xla, s_xla, n_xla = _time_us(
+            lambda a, b: conv2d_same(a, b, use_pallas=False), x, w)
         recs.append({"name": f"kernel/{name}", "schedule": "paper-plan",
-                     "impl": "xla", "wall_ms": t_xla / 1e3, **common})
+                     "impl": "xla", "wall_ms": t_xla / 1e3,
+                     "std_ms": s_xla / 1e3, "reps": n_xla, **common})
         impl = kops.select_conv_impl(x.shape, w.shape, x.dtype, (1, 1),
                                      "SAME")
-        t_auto = _time_us(jax.jit(
+        t_auto, s_auto, n_auto = _time_us(jax.jit(
             lambda a, b: kops.local_conv2d(a, b, stride=(1, 1),
                                            padding="SAME")), x, w)
         recs.append({"name": f"kernel/{name}", "schedule": "autotuned",
-                     "impl": impl, "wall_ms": t_auto / 1e3, **common})
+                     "impl": impl, "wall_ms": t_auto / 1e3,
+                     "std_ms": s_auto / 1e3, "reps": n_auto, **common})
     return recs
 
 

@@ -11,9 +11,11 @@ tokens (asserted); other grids record the bit (f32 rounding can flip a
 near-tied argmax on a random-init smoke model, see docs/serving.md).
 
 ``run_json(quick=...)`` returns the ``BENCH_serve.json`` records
-(schema: ``{arch, grid, schedule, tokens_per_s, p50_ms, p99_ms,
-wire_bytes_per_tok}`` + the common ``{name, wire_bytes, peak_elems,
-wall_ms}`` baseline fields) that ``benchmarks/run.py`` persists.
+(schema: ``{arch, smoke, dtype, slots, grid, schedule, tokens_per_s,
+p50_ms, p99_ms, wire_bytes_per_tok}`` + the common ``{name, wire_bytes,
+peak_elems, wall_ms, std_ms, reps}`` baseline fields — enough to rebuild
+the decode DAG for ``repro.perf`` prediction) that ``benchmarks/run.py``
+persists.
 """
 
 from __future__ import annotations
@@ -59,6 +61,9 @@ for grid, sched in cells:
     gstr = "dense" if grid is None else "x".join(str(g) for g in grid)
     rec = {"name": f"serve/{cfg.arch_id}/{gstr}",
            "arch": cfg.arch_id,
+           "smoke": True,
+           "dtype": cfg.dtype,
+           "slots": kw["slots"],
            "grid": list(grid) if grid else None,
            "schedule": sched,
            "tokens_per_s": res["tokens_per_s"],
@@ -67,7 +72,9 @@ for grid, sched in cells:
            "wire_bytes_per_tok": res.get("wire_bytes_per_tok", 0.0),
            "wire_bytes": res.get("wire_bytes_per_tok", 0.0),
            "peak_elems": res.get("peak_mem_bytes", 0.0) / 4,
-           "wall_ms": res["p50_ms"],
+           "wall_ms": res["mean_ms"],
+           "std_ms": res["std_ms"],
+           "reps": res["reps"],
            "tokens_match_dense": (res["tokens"] == dense_tokens
                                   if grid is not None else True)}
     out.append(rec)

@@ -5,10 +5,15 @@ trajectory to ``BENCH_comm.json`` + ``BENCH_kernels.json`` +
 ``BENCH_serve.json`` at the repo root (schema per record: ``{name, grid,
 schedule, wire_bytes, peak_elems, wall_ms}`` plus module-specific extras
 — the serve records add ``{arch, tokens_per_s, p50_ms, p99_ms,
-wire_bytes_per_tok}``).  The JSON files are checked in
+wire_bytes_per_tok}``).  Every record carries ``reps``/``std_ms``
+(per-rep timing noise, warmup discarded) and a ``predicted_ms`` column —
+the ``repro.perf`` trace-replay prediction under the alpha-beta
+calibration fit from this same run, persisted as ``CALIB.json`` +
+``CALIB_report.json``.  The JSON files are checked in
 as the regression baseline: future PRs diff their wire/peak fields (exact
 analytic/HLO quantities; ``wall_ms``/``measured_live_bytes`` are
-machine-dependent and informational).
+machine-dependent and informational, and ``predicted_ms`` drift is gated
+separately by the CI ``calib`` job).
 
   table12       Table 1/2 closed-form costs vs integer solver (the paper's
                 central analytic result)
@@ -65,25 +70,57 @@ def main() -> None:
             print(f"{name},ERROR,", file=sys.stderr)
             traceback.print_exc()
 
+    by_file = {}
     for fname, fn in [("BENCH_comm.json", bench_comm_volume.run_json),
                       ("BENCH_kernels.json", bench_kernels.run_json),
                       ("BENCH_serve.json", bench_serve.run_json)]:
         try:
-            recs = fn(quick=args.quick)
-            path = os.path.join(args.out_dir, fname)
-            with open(path, "w") as f:
-                json.dump(recs, f, indent=1, sort_keys=True)
-                f.write("\n")
-            for rec in recs:
-                print(f"{rec['name']}/{rec['schedule']},"
-                      f"{rec['wall_ms'] * 1e3:.0f},"
-                      f"wire={rec['wire_bytes']:.3e}B,"
-                      f"peak={rec['peak_elems']:.3e}el")
-            print(f"# wrote {path} ({len(recs)} records)", file=sys.stderr)
+            by_file[fname] = fn(quick=args.quick)
         except Exception:
             failed += 1
             print(f"{fname},ERROR,", file=sys.stderr)
             traceback.print_exc()
+
+    # calibrate the alpha-beta cost model from this run's records, then
+    # annotate every record with its replay prediction (predicted_ms next
+    # to wall_ms) before persisting.  Fit failures are non-fatal: the
+    # bench baselines are still written, just without predictions.
+    try:
+        from repro.perf.calibrate import (annotate_predictions,
+                                          fit_collectives,
+                                          prediction_error_report)
+        fit_recs = (by_file.get("BENCH_comm.json", [])
+                    + by_file.get("BENCH_serve.json", []))
+        kern = by_file.get("BENCH_kernels.json", [])
+        calib = fit_collectives(fit_recs, kernel_records=kern)
+        calib.save(os.path.join(args.out_dir, "CALIB.json"))
+        for recs in by_file.values():
+            annotate_predictions(recs, calib)
+        report = prediction_error_report(fit_recs + kern, calib)
+        with open(os.path.join(args.out_dir, "CALIB_report.json"),
+                  "w") as f:
+            json.dump(report, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"# calib median_rel_err="
+              f"{report['summary']['median_rel_err']:.3f} over "
+              f"{report['summary']['n_records']} records",
+              file=sys.stderr)
+    except Exception:
+        failed += 1
+        print("CALIB.json,ERROR,", file=sys.stderr)
+        traceback.print_exc()
+
+    for fname, recs in by_file.items():
+        path = os.path.join(args.out_dir, fname)
+        with open(path, "w") as f:
+            json.dump(recs, f, indent=1, sort_keys=True)
+            f.write("\n")
+        for rec in recs:
+            print(f"{rec['name']}/{rec['schedule']},"
+                  f"{rec['wall_ms'] * 1e3:.0f},"
+                  f"wire={rec['wire_bytes']:.3e}B,"
+                  f"peak={rec['peak_elems']:.3e}el")
+        print(f"# wrote {path} ({len(recs)} records)", file=sys.stderr)
     if failed:
         sys.exit(1)
 

@@ -133,6 +133,13 @@ class DistGridChoice:
     model_cost: float                      # cost_model objective (elements)
     comm_elems: Dict                       # runtime wire accounting
     mem_elems: float = 0.0                 # runtime peak-live accounting
+    predicted_ms: Optional[float] = None   # replay prediction (time mode)
+    schedule: Optional[str] = None         # winning schedule (auto mode)
+
+
+def _resolve_calib(calib):
+    from repro.perf.calibrate import load_calib
+    return calib if calib is not None else load_calib()
 
 
 def _algo_family(grid: Tuple[int, int, int, int, int]) -> str:
@@ -161,6 +168,8 @@ def synthesize_dist_grid(x_shape, w_shape, n_devices: int, *,
                          stride=(1, 1), padding="SAME",
                          train: bool = True,
                          schedule: str = "allgather",
+                         minimize: str = "comm",
+                         calib=None,
                          mem_cap_elems: Optional[float] = None
                          ) -> DistGridChoice:
     """Choose the ``(Pb, Ph, Pw, Pk, Pc)`` grid for ``repro.dist``.
@@ -173,6 +182,15 @@ def synthesize_dist_grid(x_shape, w_shape, n_devices: int, *,
     ``train`` else ``cost_distributed_total`` — with the runtime
     ``conv_train_comm_elems`` total as tie-break.
 
+    ``minimize="time"`` ranks by the calibrated trace-replay prediction
+    (``repro.perf.predict_conv_step_ms`` under ``calib``, default the
+    machine's ``CALIB.json``) instead of the analytic objective — per-hop
+    latencies and ring-pipelining overlap then separate grids (and
+    schedules) the element accounting provably ties.  With
+    ``schedule="auto"`` (time mode only) the allgather/ring/ring2
+    schedules enter the search alongside the grids; the winner lands in
+    ``DistGridChoice.schedule``.
+
     ``mem_cap_elems`` optimizes under a per-device memory cap: grids whose
     runtime peak-live accounting (``conv_train_mem_elems`` /
     ``conv_mem_elems`` for ``schedule``) exceeds the cap are discarded —
@@ -181,11 +199,24 @@ def synthesize_dist_grid(x_shape, w_shape, n_devices: int, *,
     grids the gather schedules cannot fit.
     """
     from repro.core.grid import grid_from_tuple
-    from repro.dist.conv2d import (_pad_amounts, conv_comm_elems,
-                                   conv_grid_divides, conv_mem_elems,
-                                   conv_train_comm_elems,
+    from repro.dist.conv2d import (_conv_effective_schedule, _pad_amounts,
+                                   conv_comm_elems, conv_grid_divides,
+                                   conv_mem_elems, conv_train_comm_elems,
                                    conv_train_mem_elems)
 
+    if minimize not in ("comm", "time"):
+        raise ValueError(f"minimize must be 'comm' or 'time', "
+                         f"got {minimize!r}")
+    if schedule == "auto":
+        if minimize != "time":
+            raise ValueError("schedule='auto' needs minimize='time' — "
+                             "the analytic objective ties all schedules")
+        schedules = ("allgather", "ring", "ring2")
+    else:
+        schedules = (schedule,)
+    if minimize == "time":
+        calib = _resolve_calib(calib)
+        from repro.perf.predict import predict_conv_step_ms
     if isinstance(stride, int):
         stride = (stride, stride)
     N, C, H, W = x_shape
@@ -206,31 +237,44 @@ def synthesize_dist_grid(x_shape, w_shape, n_devices: int, *,
                                  padding=padding):
             continue
         choice = grid_from_tuple(p, grid).solution.choice
-        if train:
-            model_cost = cost_model.cost_distributed_train(
-                p, n_devices, choice)
-            elems = conv_train_comm_elems(x_shape, w_shape, grid,
-                                          stride=stride, padding=padding,
-                                          schedule=schedule)
-            mem = conv_train_mem_elems(x_shape, w_shape, grid,
-                                       stride=stride, padding=padding,
-                                       schedule=schedule)["peak"]
-        else:
-            model_cost = cost_model.cost_distributed_total(
-                p, n_devices, choice)
-            elems = conv_comm_elems(x_shape, w_shape, grid, stride=stride,
-                                    padding=padding)
-            mem = conv_mem_elems(x_shape, w_shape, grid, stride=stride,
-                                 padding=padding, schedule=schedule)["peak"]
-        if mem_cap_elems is not None and mem > mem_cap_elems:
-            capped_out += 1
-            continue
-        key = (model_cost, elems["total"], grid)
-        if best_key is None or key < best_key:
-            best_key = key
-            best = DistGridChoice(grid=grid, algo=_algo_family(grid),
-                                  model_cost=model_cost, comm_elems=elems,
-                                  mem_elems=mem)
+        model_cost = (cost_model.cost_distributed_train(
+            p, n_devices, choice) if train
+            else cost_model.cost_distributed_total(p, n_devices, choice))
+        for sched in schedules:
+            if (len(schedules) > 1
+                    and _conv_effective_schedule(sched, grid) != sched):
+                continue   # falls back to another candidate: skip the dup
+            if train:
+                elems = conv_train_comm_elems(x_shape, w_shape, grid,
+                                              stride=stride,
+                                              padding=padding,
+                                              schedule=sched)
+                mem = conv_train_mem_elems(x_shape, w_shape, grid,
+                                           stride=stride, padding=padding,
+                                           schedule=sched)["peak"]
+            else:
+                elems = conv_comm_elems(x_shape, w_shape, grid,
+                                        stride=stride, padding=padding)
+                mem = conv_mem_elems(x_shape, w_shape, grid, stride=stride,
+                                     padding=padding,
+                                     schedule=sched)["peak"]
+            if mem_cap_elems is not None and mem > mem_cap_elems:
+                capped_out += 1
+                continue
+            pred = None
+            if minimize == "time":
+                pred = predict_conv_step_ms(
+                    x_shape, w_shape, grid, stride=stride, padding=padding,
+                    schedule=sched, train=train, calib=calib)
+                key = (pred, elems["total"], grid)
+            else:
+                key = (model_cost, elems["total"], grid)
+            if best_key is None or key < best_key:
+                best_key = key
+                best = DistGridChoice(grid=grid, algo=_algo_family(grid),
+                                      model_cost=model_cost,
+                                      comm_elems=elems, mem_elems=mem,
+                                      predicted_ms=pred, schedule=sched)
     if best is None:
         detail = (f" under mem cap {mem_cap_elems:.3e} elems "
                   f"({capped_out} grids over cap)"
@@ -245,6 +289,8 @@ def synthesize_cnn_grid(x_shape, channels, n_classes: int,
                         n_devices: int, *, k: int = 3,
                         pool_every: int = 2,
                         schedule: str = "allgather",
+                        minimize: str = "comm",
+                        calib=None,
                         mem_cap_elems: Optional[float] = None
                         ) -> DistGridChoice:
     """Choose ONE ``(Pb, Ph, Pw, Pk, Pc)`` grid for a whole CNN.
@@ -264,11 +310,21 @@ def synthesize_cnn_grid(x_shape, channels, n_classes: int,
     onto the new grid — ``fault.monitor.ElasticPlan.plan_cnn`` wraps it
     as a decision record.  ``mem_cap_elems`` discards grids whose worst
     per-layer peak (``cnn_train_mem_elems``) exceeds the cap.
+
+    ``minimize="time"`` ranks by the whole-step trace-replay prediction
+    (``repro.perf.predict_cnn_train_ms`` under ``calib``) instead of the
+    analytic objective.
     """
     from repro.core.grid import grid_from_tuple
     from repro.dist.train import (_cnn_layer_shapes, cnn_train_comm_elems,
                                   cnn_train_mem_elems, grid_divides_cnn)
 
+    if minimize not in ("comm", "time"):
+        raise ValueError(f"minimize must be 'comm' or 'time', "
+                         f"got {minimize!r}")
+    if minimize == "time":
+        calib = _resolve_calib(calib)
+        from repro.perf.predict import predict_cnn_train_ms
     problems = []
     for (N, C, H, W), (K, _, kh, kw) in _cnn_layer_shapes(
             x_shape, channels, k=k, pool_every=pool_every):
@@ -294,12 +350,20 @@ def synthesize_cnn_grid(x_shape, channels, n_classes: int,
         if mem_cap_elems is not None and mem > mem_cap_elems:
             capped_out += 1
             continue
-        key = (model_cost, comm["total"], grid)
+        pred = None
+        if minimize == "time":
+            pred = predict_cnn_train_ms(x_shape, channels, n_classes,
+                                        grid, k=k, pool_every=pool_every,
+                                        schedule=schedule, calib=calib)
+            key = (pred, comm["total"], grid)
+        else:
+            key = (model_cost, comm["total"], grid)
         if best_key is None or key < best_key:
             best_key = key
             best = DistGridChoice(grid=grid, algo=_algo_family(grid),
                                   model_cost=model_cost,
-                                  comm_elems=comm, mem_elems=mem)
+                                  comm_elems=comm, mem_elems=mem,
+                                  predicted_ms=pred, schedule=schedule)
     if best is None:
         detail = (f" under mem cap {mem_cap_elems:.3e} elems "
                   f"({capped_out} grids over cap)"
@@ -320,10 +384,13 @@ class ServeGridChoice:
     routed: int                 # projections that run on the grid
     comm_elems: Dict            # lm_serve_comm_elems accounting
     mem_elems: Dict             # lm_serve_mem_elems accounting
+    predicted_ms: Optional[float] = None   # replay decode-step prediction
 
 
 def synthesize_serve_grid(cfg, n_devices: int, *, slots: int, max_seq: int,
                           schedule: str = "allgather",
+                          minimize: str = "comm",
+                          calib=None,
                           mem_cap_elems: Optional[float] = None
                           ) -> ServeGridChoice:
     """Choose the ``(Pm, Pn, Pc)`` grid for the LM serving engine.
@@ -332,7 +399,10 @@ def synthesize_serve_grid(cfg, n_devices: int, *, slots: int, max_seq: int,
     at least one decode projection satisfies the runtime divisibility
     constraints, and picks by: most projections routed through the grid,
     then least per-token decode wire (``lm_serve_comm_elems``), then
-    least peak live memory.  ``mem_cap_elems`` discards grids whose
+    least peak live memory.  ``minimize="time"`` replaces the wire rank
+    with the calibrated decode-step replay prediction
+    (``repro.perf.predict_decode_step_ms`` under ``calib``).
+    ``mem_cap_elems`` discards grids whose
     per-device peak (weights + grid-sharded KV cache + transients,
     ``lm_serve_mem_elems``) exceeds the cap — the 2.5D memory/wire
     tradeoff deciding the serving grid under the KV-cache budget.
@@ -340,6 +410,12 @@ def synthesize_serve_grid(cfg, n_devices: int, *, slots: int, max_seq: int,
     from repro.dist.lm import (lm_decode_matmuls, lm_serve_comm_elems,
                                lm_serve_mem_elems, projection_routed)
 
+    if minimize not in ("comm", "time"):
+        raise ValueError(f"minimize must be 'comm' or 'time', "
+                         f"got {minimize!r}")
+    if minimize == "time":
+        calib = _resolve_calib(calib)
+        from repro.perf.predict import predict_decode_step_ms
     best: Optional[ServeGridChoice] = None
     best_key = None
     capped_out = 0
@@ -355,13 +431,20 @@ def synthesize_serve_grid(cfg, n_devices: int, *, slots: int, max_seq: int,
         if mem_cap_elems is not None and mem["peak"] > mem_cap_elems:
             capped_out += 1
             continue
-        key = (-routed, comm["total"], mem["peak"], grid)
+        pred = None
+        if minimize == "time":
+            pred = predict_decode_step_ms(cfg, grid, slots=slots,
+                                          schedule=schedule, calib=calib)
+            key = (-routed, pred, mem["peak"], grid)
+        else:
+            key = (-routed, comm["total"], mem["peak"], grid)
         if best_key is None or key < best_key:
             best_key = key
             pm, pn, pc = grid
             best = ServeGridChoice(
                 grid=grid, algo=_algo_family((pm, 1, 1, pn, pc)),
-                routed=routed, comm_elems=comm, mem_elems=mem)
+                routed=routed, comm_elems=comm, mem_elems=mem,
+                predicted_ms=pred)
     if best is None:
         detail = (f" under mem cap {mem_cap_elems:.3e} elems "
                   f"({capped_out} grids over cap)"

@@ -182,6 +182,7 @@ class ResilienceConfig:
     schedule: str = "allgather"
     save_gathered: bool = False
     pool_every: int = 2
+    minimize: str = "comm"   # grid="auto" objective: "comm" | "time"
     straggler_z: float = 3.0
     straggler_patience: int = 3
     fault_log_path: Optional[str] = None
@@ -264,7 +265,8 @@ def make_resilient_train_loop(optimizer: AdamW, rcfg: ResilienceConfig,
             n_classes = state.params["head"].shape[1]
             choice = synthesize_cnn_grid(
                 x_shape, channels, n_classes, jax.device_count(),
-                pool_every=rcfg.pool_every, schedule=rcfg.schedule)
+                pool_every=rcfg.pool_every, schedule=rcfg.schedule,
+                minimize=rcfg.minimize)
             grid_t = choice.grid
             log.emit(FaultEvent(
                 kind="elastic_plan", step=start,

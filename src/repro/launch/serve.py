@@ -357,6 +357,9 @@ class ContinuousEngine:
             return dms[min(int(q * len(dms)), len(dms) - 1)]
 
         decode_s = sum(self.decode_ms) / 1e3
+        mean_ms = sum(self.decode_ms) / max(len(self.decode_ms), 1)
+        std_ms = (sum((t - mean_ms) ** 2 for t in self.decode_ms)
+                  / max(len(self.decode_ms), 1)) ** 0.5
         statuses = {r.rid: r.status for r in reqs}
         return {
             "tokens": {r.rid: list(r.out) for r in reqs},
@@ -366,6 +369,9 @@ class ContinuousEngine:
             "tokens_per_s": n_tok / max(decode_s, 1e-9),
             "p50_ms": pct(0.50),
             "p99_ms": pct(0.99),
+            "mean_ms": mean_ms,
+            "std_ms": std_ms,
+            "reps": len(self.decode_ms),
             "statuses": statuses,
             "errors": {r.rid: r.error for r in reqs if r.error},
             "n_ok": sum(1 for s in statuses.values() if s == "ok"),
@@ -444,7 +450,8 @@ def _make_requests(cfg, *, requests: int, prompt_len: int, gen: int,
 
 def run(cfg, *, requests: int = 8, prompt_len: int = 16, gen: int = 16,
         slots: int = 4, max_seq: Optional[int] = None, grid=None,
-        schedule: str = "allgather", mem_cap_elems: Optional[float] = None,
+        schedule: str = "allgather", minimize: str = "comm",
+        mem_cap_elems: Optional[float] = None,
         seed: int = 0, params=None, prefill_bucket: int = 16,
         warmup: bool = False, max_queue: Optional[int] = None,
         deadline_s: Optional[float] = None,
@@ -473,6 +480,7 @@ def run(cfg, *, requests: int = 8, prompt_len: int = 16, gen: int = 16,
         chosen = synthesize_serve_grid(cfg, jax.device_count(),
                                        slots=slots, max_seq=max_seq,
                                        schedule=schedule,
+                                       minimize=minimize,
                                        mem_cap_elems=mem_cap_elems)
         grid = chosen.grid
     mesh = None
@@ -519,6 +527,10 @@ def main(argv=None):
                     choices=("allgather", "ring", "ring2"))
     ap.add_argument("--grid", default=None,
                     help='"PmxPnxPc", "auto", or omit for dense')
+    ap.add_argument("--minimize", default="comm",
+                    choices=("comm", "time"),
+                    help="--grid auto objective: analytic wire volume "
+                         "or calibrated replay time (CALIB.json)")
     ap.add_argument("--mem-cap-elems", type=float, default=None)
     args = ap.parse_args(argv)
 
@@ -558,7 +570,7 @@ def main(argv=None):
         grid = tuple(int(x) for x in grid.split("x"))
     kw = dict(requests=args.requests, prompt_len=args.prompt_len,
               gen=args.gen, slots=args.slots, schedule=args.schedule,
-              mem_cap_elems=args.mem_cap_elems)
+              minimize=args.minimize, mem_cap_elems=args.mem_cap_elems)
     res = run(cfg, grid=grid, **kw)
     wire = res.get("wire_bytes_per_tok", 0.0)
     print(f"[serve] {cfg.arch_id} grid={res['grid']} "

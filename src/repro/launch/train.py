@@ -68,7 +68,7 @@ def _main_dist_grid(args):
     rcfg = ResilienceConfig(
         ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
         watchdog_timeout_s=args.watchdog_timeout or None,
-        schedule=args.schedule,
+        schedule=args.schedule, minimize=args.minimize,
         fault_log_path=(args.fault_log or None))
     opt = AdamW(lr=args.lr)
     run = make_resilient_train_loop(opt, rcfg, grid="auto",
@@ -122,6 +122,10 @@ def main():
     ap.add_argument("--classes", type=int, default=10)
     ap.add_argument("--schedule", default="allgather",
                     choices=("allgather", "ring", "ring2"))
+    ap.add_argument("--minimize", default="comm",
+                    choices=("comm", "time"),
+                    help="grid='auto' objective: analytic wire volume "
+                         "or calibrated replay time (CALIB.json)")
     ap.add_argument("--watchdog-timeout", type=float, default=0.0,
                     help="wedged-step watchdog (seconds; 0 disables)")
     ap.add_argument("--fault-plan", default="",

@@ -1,0 +1,47 @@
+"""Measured performance model of the distributed engine.
+
+Three layers (ROADMAP open item 3, borrowing the trace-replay idea from
+byteprofile-analysis):
+
+1. **calibrate** (:mod:`repro.perf.calibrate`) — fit per-collective
+   alpha-beta constants and a local-kernel compute rate from the
+   persisted ``BENCH_*.json`` benches; persisted as ``CALIB.json`` with
+   provenance (host, device count, date).
+2. **predict** (:mod:`repro.perf.predict`) — replay a step's per-layer
+   op DAG (tile-model compute + calibrated collectives, honoring ring
+   pipelining overlap) to a wall-time prediction; every bench record
+   gains a ``predicted_ms`` column next to ``wall_ms``.
+3. **synthesize** — ``synthesize_dist_grid`` / ``synthesize_cnn_grid`` /
+   ``synthesize_serve_grid`` (:mod:`repro.core.sharding_synthesis`) take
+   ``minimize="time"`` to rank candidate grids (and, for
+   ``schedule="auto"``, schedules) by predicted wall time instead of
+   analytic wire volume.
+
+The CI ``calib`` job (``make calib-test``) refits from a fresh quick
+bench and gates on the median relative error of ``predicted_ms`` vs
+``wall_ms``, so the model can never silently drift from the machine it
+claims to describe.  Runbook: ``docs/perf.md``.
+"""
+
+from repro.perf.calibrate import (CALIB_TOL, CalibEntry, CalibTable,
+                                  annotate_predictions, fit_collectives,
+                                  fit_compute_rate, load_calib,
+                                  noise_aware_rel_err,
+                                  prediction_error_report)
+from repro.perf.predict import (EVENT_KEYS, CommEvent, StepDag,
+                                cnn_train_dag, conv_step_dag,
+                                lm_decode_dag, matmul_step_dag,
+                                predict_cnn_train_ms, predict_conv_step_ms,
+                                predict_decode_step_ms,
+                                predict_matmul_step_ms, predict_step_ms,
+                                rank_conv_schedules, record_dag, replay_ms)
+
+__all__ = [
+    "CALIB_TOL", "CalibEntry", "CalibTable", "CommEvent", "EVENT_KEYS",
+    "StepDag", "annotate_predictions", "cnn_train_dag", "conv_step_dag",
+    "fit_collectives", "fit_compute_rate", "lm_decode_dag", "load_calib",
+    "matmul_step_dag", "noise_aware_rel_err", "prediction_error_report",
+    "predict_cnn_train_ms", "predict_conv_step_ms",
+    "predict_decode_step_ms", "predict_matmul_step_ms", "predict_step_ms",
+    "rank_conv_schedules", "record_dag", "replay_ms",
+]

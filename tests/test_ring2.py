@@ -242,8 +242,19 @@ def test_bench_baselines_schema_and_invariants():
         kern = json.load(f)
     for rec in comm + kern:
         for key in ("name", "grid", "schedule", "wire_bytes", "peak_elems",
-                    "wall_ms"):
+                    "wall_ms", "std_ms", "reps", "predicted_ms"):
             assert key in rec, (rec.get("name"), key)
+        assert rec["reps"] >= 1 and rec["std_ms"] >= 0.0, rec["name"]
+    # predicted_ms drift is gated separately from wall_ms noise: the
+    # replay prediction must sit within the calib tolerance of the wall
+    # measurement recorded in the same run (noise-aware: residual below
+    # two standard errors of the timing mean is noise, not drift)
+    from repro.perf import noise_aware_rel_err
+    errs = sorted(noise_aware_rel_err(r["predicted_ms"], r["wall_ms"],
+                                      r["std_ms"], r["reps"])
+                  for r in comm)
+    from repro.perf import CALIB_TOL
+    assert errs[len(errs) // 2] <= CALIB_TOL, errs
     by_key = {(r["name"], r["schedule"]): r for r in comm}
     names = {r["name"] for r in comm if r["name"].startswith("comm/fwd")}
     assert names, "no comm/fwd records"

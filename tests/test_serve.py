@@ -407,9 +407,13 @@ def test_bench_serve_baseline_schema_and_invariants():
         for key in ("name", "arch", "grid", "schedule", "tokens_per_s",
                     "p50_ms", "p99_ms", "wire_bytes_per_tok",
                     "wire_bytes", "peak_elems", "wall_ms",
-                    "tokens_match_dense"):
+                    "slots", "smoke", "dtype", "std_ms", "reps",
+                    "predicted_ms", "tokens_match_dense"):
             assert key in rec, (rec.get("name"), key)
         assert rec["tokens_per_s"] > 0
+        assert rec["reps"] >= 1 and rec["std_ms"] >= 0.0, rec["name"]
+        # predicted_ms drift gates separately from wall_ms noise
+        assert rec["predicted_ms"] > 0, rec["name"]
         if rec["grid"] == [2, 2, 2]:
             assert rec["tokens_match_dense"], rec["name"]
     # the exact wire field reproduces the analytic accounting (f32,
